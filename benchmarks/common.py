@@ -1,0 +1,22 @@
+"""Shared benchmark plumbing: every benchmark yields CSV rows
+(name, us_per_call, derived)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6

@@ -1,0 +1,32 @@
+"""Paper Fig. 3: computation time scaling in (a) #tasks, (b) sample size,
+(c) dimensionality — AMTL vs SMTL at fixed iterations."""
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import NetworkModel, make_synthetic, simulate_amtl, \
+    simulate_smtl
+
+NET = NetworkModel(delay_offset=1.0, compute_time=0.05, prox_time=0.02)
+EPOCHS = 5
+
+
+def _pair(rows, tag, prob):
+    ra, us_a = timed(lambda: simulate_amtl(prob, NET, EPOCHS, seed=1,
+                                           record_objective=False))
+    rs, us_s = timed(lambda: simulate_smtl(prob, NET, EPOCHS, seed=1,
+                                           record_objective=False))
+    rows.append(Row(f"fig3/{tag}_amtl", us_a,
+                    f"sim_time_s={ra.total_time:.2f}"))
+    rows.append(Row(f"fig3/{tag}_smtl", us_s,
+                    f"sim_time_s={rs.total_time:.2f}"))
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for t in (5, 25, 50, 100):                      # (a) tasks
+        _pair(rows, f"tasks{t}", make_synthetic(t, 100, 50, seed=0))
+    for n in (100, 500, 1000):                      # (b) samples
+        _pair(rows, f"samples{n}", make_synthetic(5, n, 50, seed=0))
+    for d in (50, 200, 500):                        # (c) dims
+        _pair(rows, f"dim{d}", make_synthetic(5, 100, d, seed=0))
+    return rows

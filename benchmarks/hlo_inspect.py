@@ -1,0 +1,72 @@
+"""Hillclimb helper: lower one (arch x shape) combo and print the largest
+collective ops and a byte histogram from the compiled HLO.
+
+    PYTHONPATH=src python -m benchmarks.hlo_inspect gemma2-2b decode_32k \
+        [--unroll] [--top 15] [--grep all-gather]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+import sys
+
+from repro.launch.dryrun import (_COLL_RE, _shape_bytes, build_combo,
+                                 collective_bytes)
+from repro.launch import shapes as shp
+from repro.launch.mesh import make_production_mesh
+from repro.configs import get_config
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--periods", type=int, default=0,
+                    help="override num_periods (0 = config value)")
+    ap.add_argument("--top", type=int, default=12)
+    ap.add_argument("--grep", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.periods:
+        from repro.launch.dryrun import _with_periods
+        cfg = _with_periods(cfg, args.periods)
+    shape = shp.SHAPES[args.shape]
+    mesh = make_production_mesh()
+    fn, structs, in_sh, _ = build_combo(
+        cfg, shape, mesh, unroll=True if args.unroll else 1)
+    jitted = jax.jit(fn, in_shardings=in_sh,
+                     donate_argnums=0 if shape.kind == "train" else ())
+    with mesh:
+        compiled = jitted.lower(*structs).compile()
+    hlo = compiled.as_text()
+    print(f"# cost: {compiled.cost_analysis()}")
+    print(f"# collective bytes/device: {collective_bytes(hlo)}")
+
+    rows = []
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        result = _shape_bytes(line.split("=", 1)[1].split(kind)[0])
+        rows.append((result, kind, line.strip()[:240]))
+    rows.sort(reverse=True)
+    print(f"\n# top {args.top} collectives by result bytes:")
+    for b, kind, line in rows[:args.top]:
+        print(f"{b/2**20:9.1f} MiB {kind:>18}  {line[:200]}")
+
+    if args.grep:
+        print(f"\n# lines matching {args.grep!r}:")
+        for line in hlo.splitlines():
+            if args.grep in line:
+                print(line.strip()[:240])
+
+
+if __name__ == "__main__":
+    main()

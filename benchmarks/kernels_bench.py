@@ -1,0 +1,81 @@
+"""Kernel micro-benchmarks: fused ops vs unfused jnp chains on CPU.
+
+On this container the Pallas TPU kernels only run in interpret mode (not a
+performance mode), so the timing compares the FUSED reference (what the
+kernel computes in one pass) against the UNFUSED multi-pass jnp chain —
+the fusion payoff the kernel encodes, measurable on any backend.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.kernels import ref
+
+
+def _bench(fn, *args, iters=20) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+@jax.jit
+def _km_unfused(v, p, g, eta, eta_k):
+    step = p - eta * g          # pass 1
+    delta = step - v            # pass 2
+    return v + eta_k * delta    # pass 3
+
+
+@jax.jit
+def _km_fused(v, p, g, eta, eta_k):
+    return ref.km_update_ref(v, p, g, eta, eta_k)
+
+
+@jax.jit
+def _lstsq_unfused(x, w, y):
+    pred = x @ w
+    r = pred - y
+    return 2.0 * (x.T @ r)
+
+
+@jax.jit
+def _lstsq_fused(x, w, y):
+    return ref.lstsq_grad_ref(x, w, y)
+
+
+def run() -> list[Row]:
+    rows = []
+    k = jax.random.PRNGKey(0)
+    d, t = 8192, 128
+    v, p, g = (jax.random.normal(kk, (d, t)) for kk in jax.random.split(k, 3))
+    eta = jnp.asarray(0.05)
+    eta_k = jnp.asarray(0.8)
+    us_u = _bench(_km_unfused, v, p, g, eta, eta_k)
+    us_f = _bench(_km_fused, v, p, g, eta, eta_k)
+    rows.append(Row("kernels/km_update_unfused", us_u, f"d={d}xT={t}"))
+    rows.append(Row("kernels/km_update_fused", us_f,
+                    f"speedup={us_u / max(us_f, 1e-9):.2f}x"))
+
+    n, dd = 8192, 512
+    kx, kw, ky = jax.random.split(k, 3)
+    x = jax.random.normal(kx, (n, dd)) / jnp.sqrt(dd)
+    w = jax.random.normal(kw, (dd,))
+    y = jax.random.normal(ky, (n,))
+    us_u = _bench(_lstsq_unfused, x, w, y)
+    us_f = _bench(_lstsq_fused, x, w, y)
+    rows.append(Row("kernels/lstsq_grad_unfused", us_u, f"n={n}xd={dd}"))
+    rows.append(Row("kernels/lstsq_grad_fused", us_f,
+                    f"speedup={us_u / max(us_f, 1e-9):.2f}x"))
+
+    wmat = jax.random.normal(k, (8192, 64))
+    us = _bench(jax.jit(lambda a: ref.l21_prox_ref(a, jnp.asarray(0.3))),
+                wmat)
+    rows.append(Row("kernels/l21_prox", us, "d=8192xT=64"))
+    return rows

@@ -1,0 +1,149 @@
+"""Roofline analysis from the dry-run JSONL (deliverable (g)).
+
+Per (arch x shape) on the single-pod mesh:
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / (links * link_bw)
+
+(cost_analysis on the SPMD-partitioned module reports PER-DEVICE flops and
+bytes, so no further division by chip count is needed.)
+
+TWO dry-run artifacts feed this report:
+  - dryrun_single_unrolled.jsonl  (scan fully unrolled): flops / bytes /
+    collective bytes.  Required because XLA's cost_analysis counts a
+    while-loop body ONCE, not x trip count — a scanned 36-layer model
+    reports ~1/36 of its real flops (verified; EXPERIMENTS.md §Dry-run).
+  - dryrun_single.jsonl  (production lax.scan): temp bytes per device (the
+    "fits in HBM" story — the scanned module is what would actually run).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI with 4 links usable per chip on a 2D torus (2 per in-mesh axis).
+MODEL_FLOPS = 6*N(_active)*D tokens (train), 2*N*D (prefill/decode).
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_LINK_BW = 50e9           # bytes/s per link
+ICI_LINKS = 4                # usable links per chip (2D torus)
+
+TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+          "decode_32k": 128, "long_500k": 1}
+TRAIN_MULT = {"train_4k": 3, "prefill_32k": 1, "decode_32k": 1,
+              "long_500k": 1}   # fwd+bwd = 3x fwd FLOPs
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_frac: float
+    temp_gb: float
+    memory_s_tpu: float = 0.0   # memory term minus bf16->f32 convert traffic
+    #                             (XLA:CPU artifact; TPU runs bf16 natively)
+
+    def table_row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.compute_s:.2e} | "
+                f"{self.memory_s:.2e} | {self.memory_s_tpu:.2e} | "
+                f"{self.collective_s:.2e} | "
+                f"**{self.bottleneck}** | {self.useful_frac:.2f} | "
+                f"{self.temp_gb:.1f} |")
+
+
+def analyse(row: dict, chips: int = 256,
+            temp_bytes: float | None = None) -> RooflineRow | None:
+    if row.get("status") != "ok":
+        return None
+    flops_dev = row.get("flops_per_device") or 0.0
+    bytes_dev = row.get("bytes_per_device") or 0.0
+    coll = row.get("collective_bytes") or {}
+    coll_dev = sum(coll.values())
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    # lower bound: with fused converts the estimate can exceed the
+    # aggregate count, clamping to 0 — the true TPU memory term lies in
+    # [memory_s_tpu, memory_s]; the bottleneck label uses the raw upper
+    # bound (consistent, and conservative for memory)
+    memory_s_tpu = max(bytes_dev - (row.get("convert_bytes") or 0.0),
+                       0.0) / HBM_BW
+    collective_s = coll_dev / (ICI_LINKS * ICI_LINK_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    n_active = row.get("params_active") or 0.0
+    model_flops = (TRAIN_MULT[row["shape"]] * 2.0 * n_active
+                   * TOKENS[row["shape"]])
+    hlo_total = flops_dev * chips
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    tb = temp_bytes if temp_bytes is not None else row.get("temp_bytes")
+    return RooflineRow(
+        arch=row["arch"], shape=row["shape"], mesh=row["mesh"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops,
+        hlo_flops_total=hlo_total, useful_frac=useful,
+        temp_gb=(tb or 0) / 2 ** 30, memory_s_tpu=memory_s_tpu)
+
+
+def load(path: str) -> list[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    # keep the LAST occurrence per combo (re-runs supersede)
+    dedup: dict[tuple, dict] = {}
+    for r in rows:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def report(path: str = "dryrun_single_unrolled.jsonl",
+           scan_path: str = "dryrun_single.jsonl") -> str:
+    """path: unrolled run (cost terms); scan_path: production-scan run
+    (temp bytes).  Falls back to single-file mode if one is missing."""
+    if not os.path.exists(path) and os.path.exists(scan_path):
+        path = scan_path
+    rows = load(path)
+    scan_temp = {}
+    if scan_path != path and os.path.exists(scan_path):
+        scan_temp = {(r["arch"], r["shape"]): r.get("temp_bytes")
+                     for r in load(scan_path) if r.get("status") == "ok"}
+    lines = ["| arch | shape | compute_s | memory_s | memory_s(tpu) | "
+             "collective_s | bottleneck | useful_frac | temp_GB(scan) |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    skips = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        rr = analyse(r, temp_bytes=scan_temp.get((r["arch"], r["shape"])))
+        if rr is None:
+            skips.append(f"| {r['arch']} | {r['shape']} | "
+                         f"{r.get('reason', r.get('error', '?'))} |")
+            continue
+        lines.append(rr.table_row())
+    out = "\n".join(lines)
+    if skips:
+        out += ("\n\nSkipped combos (documented, DESIGN.md §4):\n"
+                "| arch | shape | reason |\n|---|---|---|\n"
+                + "\n".join(skips))
+    return out
+
+
+def main() -> None:
+    import sys
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_single_unrolled.jsonl"
+    print(report(path))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""SGD-AMTL (the paper's §V stated future work, implemented here):
+minibatch asynchronous coordinate updates vs full-gradient AMTL at EQUAL
+WALL-CLOCK.
+
+Finding (EXPERIMENTS.md §Paper-claims): every asynchronous cycle pays the
+network delay once, so cheap minibatch gradients only help when gradient
+compute dominates the delay — in the compute-bound regime SGD-AMTL
+pipelines ~n/b more KM writes into the same wall-clock and reaches a
+lower objective; in the delay-bound regime it degenerates to
+noisier-but-not-faster and loses.  Both regimes are reported.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import NetworkModel, make_synthetic, simulate_amtl
+
+EPOCHS = 10
+SAMPLES = 200
+
+
+def run() -> list[Row]:
+    rows = []
+    regimes = {
+        "computebound": NetworkModel(delay_offset=0.05, delay_jitter=0.05,
+                                     compute_time=2.0, prox_time=0.01),
+        "delaybound": NetworkModel(delay_offset=2.0, delay_jitter=0.5,
+                                   compute_time=0.5, prox_time=0.01),
+    }
+    for regime, net in regimes.items():
+        for tasks in (5, 10):
+            prob = make_synthetic(num_tasks=tasks, samples=SAMPLES, dim=50,
+                                  seed=0)
+            r_full, us_f = timed(lambda: simulate_amtl(
+                prob, net, EPOCHS, eta_k=1.0, seed=1,
+                record_objective=False))
+            budget = r_full.total_time
+            rows.append(Row(f"sgd_amtl/{regime}_full_tasks{tasks}", us_f,
+                            f"sim_time_s={budget:.2f};"
+                            f"objective={prob.objective(r_full.w):.3f}"))
+            for bsz in (25, 50):
+                # cycles that fit the SAME wall-clock budget
+                cyc_t = (net.node_compute(0) * bsz / SAMPLES
+                         + net.delay_offset + net.delay_jitter / 2
+                         + net.prox_time)
+                cycles = max(1, int(budget / cyc_t))
+                r_sgd, us_s = timed(lambda: simulate_amtl(
+                    prob, net, cycles, eta_k=1.0, seed=1,
+                    record_objective=False, batch_size=bsz))
+                rows.append(Row(
+                    f"sgd_amtl/{regime}_b{bsz}_tasks{tasks}", us_s,
+                    f"sim_time_s={r_sgd.total_time:.2f};"
+                    f"objective={prob.objective(r_sgd.w):.3f}"))
+    return rows

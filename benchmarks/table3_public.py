@@ -1,0 +1,59 @@
+"""Paper Table III: AMTL vs SMTL on public-dataset-shaped workloads
+(School: 139 ragged regression tasks; MNIST-like: 5 binary tasks d=100;
+MTFL-like: 4 binary tasks d=10)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.core import NetworkModel, SimProblem, simulate_amtl, simulate_smtl
+from repro.data import make_mnist_like, make_school_like
+
+
+def _mtfl_like(seed=0):
+    rng = np.random.default_rng(seed)
+    sizes = [2224, 4000, 8000, 10000]
+    dim = 10
+    w = rng.standard_normal(dim)
+    xs, ys = [], []
+    for n in sizes:
+        x = rng.standard_normal((n, dim)) / np.sqrt(dim)
+        ys.append(np.where(x @ (w + 0.4 * rng.standard_normal(dim)) > 0,
+                           1.0, -1.0))
+        xs.append(x)
+    return SimProblem(xs, ys, "logistic", "nuclear", 0.05)
+
+
+def run() -> list[Row]:
+    rows = []
+    datasets = {"school": make_school_like(), "mnist": make_mnist_like(),
+                "mtfl": _mtfl_like()}
+    epochs = {"school": 3, "mnist": 5, "mtfl": 5}
+    # School carries 139 serialized server proxes per epoch; with the
+    # conservative 20 ms prox model the server (not the network)
+    # bottlenecks and the async queue inverts.  A realistic prox cost for
+    # a 28x139 SVD (~0.1 ms) restores the paper's ordering — report both
+    # regimes (EXPERIMENTS.md §Paper-claims).
+    datasets["school_fastprox"] = datasets["school"]
+    epochs["school_fastprox"] = 3
+    prox_times = {"school_fastprox": 1e-4}
+    # second mitigation, beyond-paper but suggested by the paper's own
+    # Sec. III-C: batch the server prox every K writes (K=5) so the
+    # serialized SVT stops bottlenecking the T=139 async queue
+    datasets["school_proxbatch"] = datasets["school"]
+    epochs["school_proxbatch"] = 3
+    amtl_kw = {"school_proxbatch": {"prox_every": 5, "eta_k": 1.0}}
+    for dname, prob in datasets.items():
+        for offset in (1.0, 2.0, 3.0):
+            net = NetworkModel(delay_offset=offset, compute_time=0.05,
+                               prox_time=prox_times.get(dname, 0.02))
+            ra, us_a = timed(lambda: simulate_amtl(
+                prob, net, epochs[dname], seed=1, record_objective=False,
+                **amtl_kw.get(dname, {})))
+            rs, us_s = timed(lambda: simulate_smtl(
+                prob, net, epochs[dname], seed=1, record_objective=False))
+            rows.append(Row(f"table3/AMTL-{offset:g}_{dname}", us_a,
+                            f"sim_time_s={ra.total_time:.2f}"))
+            rows.append(Row(f"table3/SMTL-{offset:g}_{dname}", us_s,
+                            f"sim_time_s={rs.total_time:.2f}"))
+    return rows

@@ -1,0 +1,29 @@
+"""Paper Tables IV-VI: objective after a fixed iteration budget, with vs
+without the delay-adaptive dynamic step size (5/10/15 tasks, offsets
+5/10/15/20 s)."""
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import NetworkModel, make_synthetic, simulate_amtl
+
+EPOCHS = 10
+
+
+def run() -> list[Row]:
+    rows = []
+    for tasks in (5, 10, 15):
+        prob = make_synthetic(num_tasks=tasks, samples=100, dim=50, seed=0)
+        for offset in (5.0, 10.0, 15.0, 20.0):
+            net = NetworkModel(delay_offset=offset, compute_time=0.1,
+                               prox_time=0.05)
+            rf, us_f = timed(lambda: simulate_amtl(
+                prob, net, EPOCHS, seed=3, dynamic_step=False))
+            rd, us_d = timed(lambda: simulate_amtl(
+                prob, net, EPOCHS, seed=3, dynamic_step=True))
+            rows.append(Row(
+                f"table456/fixed_AMTL-{offset:g}_tasks{tasks}", us_f,
+                f"objective={rf.objectives[-1]:.2f}"))
+            rows.append(Row(
+                f"table456/dynamic_AMTL-{offset:g}_tasks{tasks}", us_d,
+                f"objective={rd.objectives[-1]:.2f}"))
+    return rows

@@ -1,0 +1,46 @@
+"""Quickstart: solve a low-rank multi-task regression with AMTL.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the paper's synthetic shared-subspace problem, solves it three ways
+(centralized FISTA, synchronous SMTL, asynchronous AMTL) and shows they
+reach the same optimum — with AMTL running asynchronously under bounded
+staleness (Theorem 1).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (AMTLConfig, amtl_solve, fista_solve,
+                        reference_optimum, smtl_solve)
+from repro.data import make_mtl_problem
+
+
+def main():
+    problem = make_mtl_problem(num_tasks=8, samples=100, dim=40, rank=3,
+                               lam=0.1, seed=0)
+    eta = 1.0 / problem.lipschitz()
+    d, t = problem.dim, problem.num_tasks
+    w0 = jnp.zeros((d, t), jnp.float32)
+
+    w_star, obj_star = reference_optimum(problem, num_iters=1000)
+    print(f"[fista]  optimum objective      : {float(obj_star):.5f}")
+
+    sync = smtl_solve(problem, w0, eta, 300)
+    print(f"[smtl ]  objective after 300 it : {float(sync.objectives[-1]):.5f}")
+
+    cfg = AMTLConfig(eta=eta, eta_k=0.9, tau=4)
+    res = amtl_solve(problem, cfg, w0, jax.random.PRNGKey(0),
+                     num_epochs=300)
+    print(f"[amtl ]  objective after 300 ep : {float(res.objectives[-1]):.5f}"
+          f"   (fixed-point residual {float(res.residuals[-1]):.2e})")
+
+    gap = abs(float(res.objectives[-1]) - float(obj_star))
+    print(f"[amtl ]  gap to global optimum  : {gap:.2e}")
+    rank = int(jnp.sum(jnp.linalg.svd(res.w, compute_uv=False) > 1e-3))
+    print(f"[amtl ]  learned rank (true 3)  : {rank}")
+    assert gap < 1e-2, "AMTL failed to reach the optimum"
+    print("OK: asynchronous updates reach the same optimum as FISTA/SMTL.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""End-to-end driver: train a ~100M-param LM with mesh-AMTL MTL heads.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200          # full
+    PYTHONPATH=src python examples/train_lm.py --steps 20 --small   # quick
+
+Uses a granite-family config scaled to ~100M params (12L x 768), the full
+production train_step (AdamW + remat + the paper's AMTL head updates with
+nuclear-norm coupling), the sharded data pipeline on a host mesh, and
+periodic checkpointing.  Prints loss curves for the LM and the MTL probes.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save
+from repro.configs import get_config
+from repro.core.mtl_head import head_weights
+from repro.data import ShardedBatcher, synthetic_lm_batches
+from repro.launch.steps import (default_optimizer, init_train_state,
+                                make_train_step)
+
+
+def build_config(small: bool):
+    base = get_config("granite-8b")
+    if small:
+        return dataclasses.replace(
+            base, name="granite-20m", num_layers=4, d_model=256,
+            num_heads=4, num_kv_heads=2, head_dim=64, d_ff=1024,
+            vocab_size=8192, num_periods=4, dtype="float32")
+    # ~100M: 12 x (d=768, ff=3072), vocab 16384
+    return dataclasses.replace(
+        base, name="granite-100m", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=3072,
+        vocab_size=16384, num_periods=12, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = build_config(args.small)
+    opt = default_optimizer(cfg, lr=3e-4, total_steps=args.steps)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"model {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{cfg.num_layers}L x d{cfg.d_model}, vocab {cfg.vocab_size}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt, remat=True),
+                      donate_argnums=0)
+    data = ShardedBatcher(synthetic_lm_batches(
+        cfg.vocab_size, args.seq, args.batch, cfg.mtl.num_tasks, seed=1))
+
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), data):
+        state, m = step_fn(state, batch)
+        if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(m['loss']):7.4f}  "
+                  f"lm {float(m['lm_loss']):7.4f}  "
+                  f"probe {float(m['probe_loss']):8.5f}  "
+                  f"Vnorm {float(m['mtl_v_norm']):7.4f}  "
+                  f"({time.time()-t0:5.1f}s)")
+    save(args.ckpt, int(state.step), state.params)
+    w = head_weights(state.mtl, cfg.mtl)
+    s = jnp.linalg.svd(w.astype(jnp.float32), compute_uv=False)
+    print(f"checkpoint saved to {args.ckpt}; MTL head singular values "
+          f"(nuclear coupling): {[round(float(x),4) for x in s[:6]]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Dependency-free pytree checkpointing (npz per step, path-flattened).
+
+Arrays are pulled to host (fully addressable on this container; on a real
+pod each host would write its shard — the layout keeps one file per step
+so that extension is local).  Restore rebuilds the exact pytree structure
+and re-places leaves with an optional sharding tree.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "||"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any,
+            shardings: Any = None) -> Any:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    sh_leaves = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "spec"))
+        if shardings is not None else None)
+    for i, (kpath, leaf) in enumerate(flat_like[0]):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kpath)
+        arr = data[key]
+        if sh_leaves is not None:
+            leaves.append(jax.device_put(arr, sh_leaves[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat_like[1], leaves)

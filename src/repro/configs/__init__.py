@@ -1,0 +1,37 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own
+MTL workload config (amtl_paper)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ArchConfig, MLACfg, MoECfg, MTLCfg, RWKVCfg,
+                                SSMCfg)
+
+_MODULES = {
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "granite-8b": "repro.configs.granite_8b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def all_configs() -> dict[str, ArchConfig]:
+    return {name: get_config(name) for name in ARCH_NAMES}
+
+
+__all__ = ["ArchConfig", "MoECfg", "MLACfg", "SSMCfg", "RWKVCfg", "MTLCfg",
+           "ARCH_NAMES", "get_config", "all_configs"]

@@ -1,0 +1,59 @@
+"""Delay-adaptive dynamic step size (paper Sec. III-D, Eq. III.5/III.6).
+
+The KM relaxation of task t at event k is scaled by
+
+    c_(t,k) = log(max(nu_bar_{t,k}, 10))
+
+where nu_bar is the mean of the node's recent communication delays (the
+paper averages the last 5).  Longer historical delay => larger step, to
+compensate the lower effective activation rate (Remark 1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class DelayHistory(NamedTuple):
+    """Per-task ring buffer of recent delays."""
+
+    buf: Array     # (T, window) float32, initialized to zero
+    count: Array   # (T,) int32 — number of delays recorded so far
+
+    @staticmethod
+    def create(num_tasks: int, window: int = 5) -> "DelayHistory":
+        return DelayHistory(
+            jnp.zeros((num_tasks, window), jnp.float32),
+            jnp.zeros((num_tasks,), jnp.int32),
+        )
+
+    def record(self, task: Array, delay: Array) -> "DelayHistory":
+        """Record `delay` for `task` (scalar int32 index)."""
+        window = self.buf.shape[1]
+        slot = self.count[task] % window
+        buf = self.buf.at[task, slot].set(delay.astype(jnp.float32))
+        count = self.count.at[task].add(1)
+        return DelayHistory(buf, count)
+
+    def mean_delay(self, task: Array) -> Array:
+        """Mean of the recorded delays for `task` (0 if none yet)."""
+        window = self.buf.shape[1]
+        n = jnp.minimum(self.count[task], window)
+        total = jnp.sum(self.buf[task])
+        return jnp.where(n > 0, total / jnp.maximum(n, 1), 0.0)
+
+    def mean_delay_all(self) -> Array:
+        """(T,) vector of per-task mean recent delays."""
+        window = self.buf.shape[1]
+        n = jnp.minimum(self.count, window)
+        total = jnp.sum(self.buf, axis=1)
+        return jnp.where(n > 0, total / jnp.maximum(n, 1), 0.0)
+
+
+def dynamic_multiplier(mean_delay: Array) -> Array:
+    """c = log(max(nu_bar, 10)) — Eq. III.6 (natural log, >= log 10)."""
+    return jnp.log(jnp.maximum(mean_delay, 10.0))

@@ -1,0 +1,161 @@
+"""Mesh-AMTL: the paper's technique as a first-class train_step feature.
+
+T task-specific linear probes W = [w_1..w_T] in R^{d_model x T} sit on the
+backbone's pooled hidden state and are coupled by a non-smooth regularizer
+(nuclear norm by default — shared-subspace MTL, paper Sec. IV).  They are
+NOT updated by the smooth optimizer; instead each train step performs one
+mesh-adapted AMTL round (DESIGN.md §3, mode 3):
+
+  * activation mask  m ~ Bernoulli(rate)^T      (Poisson thinning, Asm. 1)
+  * per-task stale read from a ring buffer of the last tau+1 iterates
+    (nu_t sampled <= tau — ICI-delay in iterate space)
+  * backward step: p = prox_{eta lam g}(v_hat) at the "server" (an
+    all-gather of the task-sharded head on real hardware)
+  * forward step on active blocks only, with the analytic least-squares
+    probe gradient (the probe IS the paper's per-task linear model)
+  * KM write-back with the delay-adaptive step of Eq. III.5/III.6
+
+The probe loss also flows into the backbone (inductive transfer to the
+representation), but W itself sees only AMTL updates.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MTLCfg
+from repro.core.dynamic_step import dynamic_multiplier
+from repro.core.operators import amtl_max_step
+from repro.core.prox import get_regularizer
+
+Array = jax.Array
+
+
+class MTLHeadState(NamedTuple):
+    ring: Array          # (tau+1, d, T) fp32 — past iterates of V
+    ptr: Array           # () int32 newest slot
+    step: Array          # () int32 events so far
+    delay_buf: Array     # (T, window) fp32 recent staleness per task
+    delay_cnt: Array     # (T,) int32
+
+
+def init_mtl_state(d_model: int, cfg: MTLCfg, window: int = 5
+                   ) -> MTLHeadState:
+    t = cfg.num_tasks
+    return MTLHeadState(
+        ring=jnp.zeros((cfg.tau + 1, d_model, t), jnp.float32),
+        ptr=jnp.zeros((), jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+        delay_buf=jnp.zeros((t, window), jnp.float32),
+        delay_cnt=jnp.zeros((t,), jnp.int32),
+    )
+
+
+def stale_read(state: MTLHeadState, cfg: MTLCfg, key: Array
+               ) -> tuple[Array, Array]:
+    """Per-task stale read v_hat (d, T) and the sampled staleness (T,)."""
+    depth = cfg.tau + 1
+    t = state.ring.shape[-1]
+    nu = jax.random.randint(key, (t,), 0, cfg.tau + 1)
+    nu = jnp.minimum(nu, state.step)                     # can't pre-date t=0
+    idx = (state.ptr - nu) % depth                       # (T,)
+    # Column t comes from iterate (k - nu_t): a stale AND inconsistent read
+    # (different columns from different pasts) — exactly the read model the
+    # ARock analysis covers.  The own-block term of Eq. III.4 uses the
+    # current iterate (see amtl_head_update: delta is computed vs v_cur).
+    v_hat = state.ring[idx, :, jnp.arange(t)].T          # (d, T)
+    return v_hat, nu
+
+
+def probe_predictions(p_cols: Array, pooled: Array, task_ids: Array
+                      ) -> Array:
+    """y_hat_i = pooled_i . p[:, task_i].  pooled: (B, d) fp32."""
+    w_per_ex = p_cols.T[task_ids]                        # (B, d)
+    return jnp.sum(pooled * w_per_ex, axis=-1)
+
+
+def probe_loss(p_cols: Array, pooled: Array, task_ids: Array,
+               targets: Array) -> Array:
+    """Least-squares probe loss (the paper's regression tasks)."""
+    r = probe_predictions(p_cols, pooled, task_ids) - targets
+    return jnp.mean(r * r)
+
+
+def probe_task_grads(p_cols: Array, pooled: Array, task_ids: Array,
+                     targets: Array) -> Array:
+    """Analytic d loss_t / d p_t, column-stacked (d, T).
+
+    loss_t = sum_{i in task t} (pooled_i . p_t - y_i)^2  (paper Eq. III.2's
+    separable gradient, computed without a second autodiff pass).
+    """
+    t = p_cols.shape[1]
+    r = probe_predictions(p_cols, pooled, task_ids) - targets   # (B,)
+    onehot = jax.nn.one_hot(task_ids, t, dtype=pooled.dtype)    # (B, T)
+    g = 2.0 * jnp.einsum("bd,b,bt->dt", pooled, r, onehot)
+    counts = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)
+    return g / counts                                   # mean per task
+
+
+def amtl_head_update(state: MTLHeadState, pooled: Array, task_ids: Array,
+                     targets: Array, cfg: MTLCfg, key: Array,
+                     read: tuple[Array, Array] | None = None
+                     ) -> tuple[MTLHeadState, dict]:
+    """One mesh-AMTL round.  Returns (new state, metrics).
+
+    `read` may carry a precomputed (p, nu) pair so train_step can reuse the
+    same backward-step output for the probe loss and the head update.
+    """
+    reg = get_regularizer(cfg.reg_name)
+    k_read, k_act = jax.random.split(key)
+    t = state.ring.shape[-1]
+    depth = cfg.tau + 1
+
+    v_cur = state.ring[state.ptr]                        # (d, T)
+    if read is None:
+        v_hat, nu = stale_read(state, cfg, k_read)
+        # backward step (server prox) on the stale read
+        p = reg.prox(v_hat, jnp.asarray(cfg.eta * cfg.lam, jnp.float32))
+    else:
+        p, nu = read
+
+    # forward step: analytic probe gradient at p
+    g = probe_task_grads(p, pooled.astype(jnp.float32), task_ids,
+                         targets.astype(jnp.float32))
+
+    # delay-adaptive KM relaxation (Eq. III.5/III.6), capped by Theorem 1
+    window = state.delay_buf.shape[1]
+    slot = state.delay_cnt % window
+    delay_buf = state.delay_buf.at[jnp.arange(t), slot].set(
+        nu.astype(jnp.float32))
+    delay_cnt = state.delay_cnt + 1
+    n_recent = jnp.minimum(delay_cnt, window)
+    mean_delay = jnp.sum(delay_buf, axis=1) / jnp.maximum(n_recent, 1)
+    base = min(cfg.km_relax, amtl_max_step(cfg.tau, t, 0.99) * 3.0)
+    mult = jnp.where(cfg.dynamic_step, dynamic_multiplier(mean_delay) /
+                     dynamic_multiplier(jnp.zeros_like(mean_delay)), 1.0)
+    eta_k = base * mult                                  # (T,)
+
+    # Poisson-thinned activation mask (Assumption 1)
+    m = jax.random.bernoulli(k_act, cfg.activation_rate, (t,))
+
+    delta = p - cfg.eta * g - v_cur                      # fused Eq. III.4
+    v_new = v_cur + jnp.where(m[None, :], eta_k[None, :] * delta, 0.0)
+
+    ptr = (state.ptr + 1) % depth
+    ring = state.ring.at[ptr].set(v_new)
+    new_state = MTLHeadState(ring, ptr, state.step + 1, delay_buf, delay_cnt)
+    metrics = {
+        "mtl_active_frac": jnp.mean(m.astype(jnp.float32)),
+        "mtl_mean_staleness": jnp.mean(nu.astype(jnp.float32)),
+        "mtl_v_norm": jnp.linalg.norm(v_new),
+    }
+    return new_state, metrics
+
+
+def head_weights(state: MTLHeadState, cfg: MTLCfg) -> Array:
+    """W = prox(V) — the deployable multi-task head (one extra backward)."""
+    reg = get_regularizer(cfg.reg_name)
+    v = state.ring[state.ptr]
+    return reg.prox(v, jnp.asarray(cfg.eta * cfg.lam, jnp.float32))

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (make_mtl_problem, make_school_like,
+                                  make_mnist_like, synthetic_lm_batches)
+from repro.data.pipeline import ShardedBatcher
+
+__all__ = ["make_mtl_problem", "make_school_like", "make_mnist_like",
+           "synthetic_lm_batches", "ShardedBatcher"]

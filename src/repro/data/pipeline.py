@@ -1,0 +1,48 @@
+"""Host->device batching with mesh sharding.
+
+`ShardedBatcher` wraps a host-side numpy batch iterator and places each
+array on the mesh with the rule-engine batch specs, double-buffering one
+batch ahead (overlap host prep with device compute).
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import batch_pspec
+
+
+class ShardedBatcher:
+    def __init__(self, it: Iterator[dict], mesh: Optional[Mesh] = None,
+                 data_axes: tuple[str, ...] = ("data",)):
+        self._it = it
+        self._mesh = mesh
+        self._data_axes = data_axes
+        self._next: Optional[dict] = None
+
+    def _place(self, batch: dict) -> dict:
+        if self._mesh is None:
+            return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        sizes = dict(zip(self._mesh.axis_names, self._mesh.devices.shape))
+        out = {}
+        for k, v in batch.items():
+            spec = batch_pspec(k, np.shape(v), sizes, self._data_axes)
+            out[k] = jax.device_put(v, NamedSharding(self._mesh, spec))
+        return out
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        if self._next is None:
+            self._next = self._place(next(self._it))
+        out = self._next
+        try:
+            self._next = self._place(next(self._it))
+        except StopIteration:
+            self._next = None
+        return out

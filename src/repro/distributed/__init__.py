@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (batch_pspec, cache_pspec,
+                                        opt_state_pspecs, param_pspec,
+                                        param_pspecs, with_zero)
+
+__all__ = ["batch_pspec", "cache_pspec", "opt_state_pspecs", "param_pspec",
+           "param_pspecs", "with_zero"]

@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention with sliding-window masking + logit softcap.
+
+This is the kernel the roofline analysis calls for (EXPERIMENTS.md §Perf,
+deepseek-v3 train_4k it3): the chunked-softmax jnp path carries multi-GB
+fp32 (m, l, acc) arrays through HBM on every kv-chunk iteration; here they
+live in VMEM scratch across the innermost (kv) grid dimension, so HBM
+traffic is exactly one read of q/k/v and one write of o.
+
+Layout: q, k, v are (BH, S, hd) — batch and heads flattened by the ops.py
+wrapper (GQA callers repeat kv heads; a production variant would fold the
+group into the index_map instead).  Grid (BH, S/bq, S/bk): the kv axis is
+innermost and sequential, scratch persists across it.  Block shapes are
+(bq|bk, hd) with hd padded to a lane multiple of 128 by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+BLOCK_Q = 128
+BLOCK_K = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, causal: bool, window: int | None,
+                  softcap: float | None, valid_len: int, true_hd: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                      # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                      # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(true_hd, jnp.float32))
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < valid_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int | None = None,
+                    softcap: float | None = None,
+                    valid_len: int | None = None,
+                    true_hd: int | None = None,
+                    block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                    interpret: bool = True) -> Array:
+    """q, k, v: (BH, S, hd) with S % block == 0 and hd lane-aligned
+    (handled by ops.flash_attention).  true_hd: unpadded head dim for the
+    softmax scale.  Returns (BH, S, hd)."""
+    bh, s, hd = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    grid = (bh, s // bq, s // bk)
+    kern = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, causal=causal, window=window,
+        softcap=softcap, valid_len=s if valid_len is None else valid_len,
+        true_hd=hd if true_hd is None else true_hd)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max m
+            pltpu.VMEM((bq,), jnp.float32),       # running denom l
+            pltpu.VMEM((bq, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

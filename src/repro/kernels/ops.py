@@ -1,0 +1,111 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy: Pallas kernels target TPU.  On CPU (this container, and the
+512-fake-device dry-run) the pure-jnp oracle path is used unless
+`interpret=True` is requested (tests validate kernels in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.km_update import km_update as _km_pallas
+from repro.kernels.l21_prox import l21_prox as _l21_pallas
+from repro.kernels.lstsq_grad import lstsq_grad as _lstsq_pallas
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def km_update(v: Array, p: Array, g: Array, eta: Array, eta_k: Array, *,
+              use_pallas: bool | None = None,
+              interpret: bool = False) -> Array:
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _km_pallas(v, p, g, eta, eta_k, interpret=interpret)
+    return ref.km_update_ref(v, p, g, eta, eta_k)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def l21_prox(w: Array, t: Array, *, use_pallas: bool | None = None,
+             interpret: bool = False) -> Array:
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _l21_pallas(w, t, interpret=interpret)
+    return ref.l21_prox_ref(w, t)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def lstsq_grad(x: Array, w: Array, y: Array, *,
+               use_pallas: bool | None = None,
+               interpret: bool = False) -> Array:
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _lstsq_pallas(x, w, y, interpret=interpret)
+    return ref.lstsq_grad_ref(x, w, y)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "use_pallas", "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int | None = None,
+                    softcap: float | None = None,
+                    use_pallas: bool | None = None,
+                    interpret: bool = False) -> Array:
+    """q: (S, H, hd); k, v: (S, Hkv, hd) — GQA kv heads repeated here.
+    Returns (S, H, hd).  Pads S to a 128 multiple and hd to a lane
+    multiple before entering the kernel."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    s, h, hd = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if not (use_pallas or interpret):
+        return ref.sliding_flash_attention_ref(q, k, v, window=window,
+                                               causal=causal,
+                                               softcap=softcap)
+    from repro.kernels.flash_attention import flash_attention as _fa
+    blk = 128
+    s_pad = (-s) % blk
+    hd_pad = (-hd) % 128
+    qt = jnp.pad(q, ((0, s_pad), (0, 0), (0, hd_pad))).transpose(1, 0, 2)
+    kt = jnp.pad(k, ((0, s_pad), (0, 0), (0, hd_pad))).transpose(1, 0, 2)
+    vt = jnp.pad(v, ((0, s_pad), (0, 0), (0, hd_pad))).transpose(1, 0, 2)
+    out = _fa(qt, kt, vt, causal=causal, window=window, softcap=softcap,
+              valid_len=s, true_hd=hd, interpret=interpret)
+    return out.transpose(1, 0, 2)[:s, :, :hd]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def rwkv6_scan(r: Array, k: Array, v: Array, w: Array, u: Array, *,
+               use_pallas: bool | None = None,
+               interpret: bool = False) -> Array:
+    """RWKV-6 WKV recurrence.  r,k,v,w: (S, H, D); u: (H, D)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not (use_pallas or interpret):
+        return ref.rwkv6_scan_ref(r, k, v, w, u)
+    from repro.kernels.rwkv6_scan import rwkv6_scan as _wkv
+    s = r.shape[0]
+    blk = 128
+    pad = (-s) % blk
+    if pad:
+        pads = ((0, pad), (0, 0), (0, 0))
+        # w=1 on padding keeps the (unused) state finite
+        r2, k2, v2 = (jnp.pad(a, pads) for a in (r, k, v))
+        w2 = jnp.pad(w, pads, constant_values=1.0)
+        return _wkv(r2, k2, v2, w2, u, interpret=interpret)[:s]
+    return _wkv(r, k, v, w, u, interpret=interpret)

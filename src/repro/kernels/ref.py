@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth: kernels must match these to
+numerical tolerance across the shape/dtype sweeps in tests/test_kernels_*.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def km_update_ref(v: Array, p: Array, g: Array, eta: Array,
+                  eta_k: Array) -> Array:
+    """Fused AMTL update (paper Eq. III.4): v + eta_k*(p - eta*g - v)."""
+    return v + eta_k * (p - eta * g - v)
+
+
+def l21_prox_ref(w: Array, t: Array) -> Array:
+    """Row-group soft threshold: w^i * max(0, 1 - t/||w^i||)."""
+    w32 = w.astype(jnp.float32)
+    norms = jnp.linalg.norm(w32, axis=-1, keepdims=True)
+    scale = jnp.maximum(0.0, 1.0 - t / jnp.maximum(norms, 1e-12))
+    return (w32 * scale).astype(w.dtype)
+
+
+def lstsq_grad_ref(x: Array, w: Array, y: Array) -> Array:
+    """Fused least-squares gradient 2 X^T (X w - y) (paper forward step)."""
+    x32, w32, y32 = (a.astype(jnp.float32) for a in (x, w, y))
+    return (2.0 * (x32.T @ (x32 @ w32 - y32))).astype(w.dtype)
+
+
+def sliding_flash_attention_ref(q: Array, k: Array, v: Array, *,
+                                window: int | None, causal: bool = True,
+                                softcap: float | None = None) -> Array:
+    """O(S^2) reference attention with optional sliding window + softcap.
+
+    q,k,v: (S, H, D) single batch element; GQA is handled by the caller
+    repeating kv heads.  Returns (S, H, D).
+    """
+    s, h, d = q.shape
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum("qhd,khd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos_q = jnp.arange(s)[:, None]
+    pos_k = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window is not None:
+        mask &= pos_k > pos_q - window
+    logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hqk,khd->qhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rwkv6_scan_ref(r: Array, k: Array, v: Array, w: Array, u: Array) -> Array:
+    """RWKV-6 (Finch) WKV recurrence, sequential reference.
+
+    r,k,v: (S, H, D); w: (S, H, D) data-dependent per-step decay (in (0,1));
+    u: (H, D) bonus for the current token.  State S_h in R^{D x D}:
+        out_t = r_t . (S + u * k_t v_t^T);   S <- diag(w_t) S + k_t v_t^T
+    Returns (S, H, D).
+    """
+    s, h, d = r.shape
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp           # each (H, D)
+        kv = k_t[:, :, None] * v_t[:, None, :]          # (H, D, D)
+        out = jnp.einsum("hd,hde->he", r_t,
+                         state + u[:, :, None] * kv)     # (H, D)
+        state = w_t[:, :, None] * state + kv
+        return state, out
+
+    state0 = jnp.zeros((h, d, d), jnp.float32)
+    _, outs = jax.lax.scan(
+        step, state0,
+        (r.astype(jnp.float32), k.astype(jnp.float32),
+         v.astype(jnp.float32), w.astype(jnp.float32)))
+    return outs.astype(r.dtype)

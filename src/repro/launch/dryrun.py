@@ -1,0 +1,416 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+#   This is dry-run-only; tests and benches see the real single CPU device.
+
+"""Multi-pod dry run: lower + compile every (arch x shape x mesh) combo.
+
+For each combo this:
+  1. builds the production mesh (16x16 or 2x16x16),
+  2. constructs ShapeDtypeStruct inputs (launch/shapes.py) and the rule-
+     engine shardings (distributed/sharding.py),
+  3. jits the real train/prefill/decode step with those shardings,
+     .lower().compile() — any sharding mismatch, OOM-at-compile or
+     unsupported collective is a bug in the system,
+  4. records memory_analysis / cost_analysis / per-collective bytes parsed
+     from the compiled HLO into a JSON row for §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k \
+      [--multi-pod] [--out results.json]
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import math
+import re
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as shd
+from repro.launch import shapes as shp
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.steps import (default_optimizer, init_train_state,
+                                make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models import serving
+from repro.models.moe import ParallelCtx
+
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+          "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|"
+                       r"pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(tok):
+        n = math.prod(int(d) for d in dims.split(",") if d) if dims else 1
+        total += n * _BYTES[dt]
+    return total
+
+
+_CONVERT_RE = re.compile(
+    r"=\s*f32\[([0-9,]*)\][^ ]*\s+convert\(")
+_CONVERT_SRC_RE = re.compile(r"convert\(%[^)]*\)")
+
+
+def convert_bf16_bytes(hlo_text: str) -> float:
+    """Bytes written by bf16->f32 convert ops (XLA:CPU artifact — CPU has
+    no native bf16 compute, TPU does; subtracted for the TPU-adjusted
+    memory roofline term, EXPERIMENTS.md §Roofline)."""
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _CONVERT_RE.search(line)
+        if not m:
+            continue
+        dims = m.group(1)
+        n = math.prod(int(d) for d in dims.split(",") if d) if dims else 1
+        # f32 result write + bf16 operand read
+        total += n * 6.0
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum per-device collective bytes by op kind from post-SPMD HLO."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        result = _shape_bytes(line.split("=", 1)[1].split(kind)[0])
+        if kind == "all-reduce":
+            out[kind] += 2.0 * result          # ring RS + AG
+        elif kind == "reduce-scatter":
+            # operand bytes = what each device ships through the ring
+            args = line.split(kind, 1)[1]
+            out[kind] += _shape_bytes(args.split("),", 1)[0])
+        else:
+            out[kind] += result
+    return out
+
+
+def _replicated(tree):
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def build_combo(cfg: ArchConfig, shape: shp.ShapeSpec, mesh,
+                unroll: bool | int = 1, remat: bool | str = True):
+    """Returns (fn, arg_structs, in_shardings) ready to lower.
+
+    unroll=True fully unrolls the layer scans: required for accurate
+    cost_analysis (XLA counts a while-loop body once, not x trip-count),
+    at the price of longer compiles.  The multi-pod compile-proof runs
+    with the production scan (unroll=1).
+    """
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    daxes = data_axes(mesh)
+    ctx = ParallelCtx(mesh=mesh, data_axes=daxes, model_axis="model",
+                      ep_data_axis="data")
+    key = jax.random.PRNGKey(0)
+    msize = axis_sizes.get("model", 1)
+
+    def named(pspec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        opt = default_optimizer(cfg)
+        state_struct = jax.eval_shape(
+            partial(init_train_state, cfg=cfg, optimizer=opt), key)
+        state_spec = type(state_struct)(
+            params=shd.param_pspecs(state_struct.params, cfg, axis_sizes),
+            opt_state=shd.opt_state_pspecs(
+                state_struct.opt_state, state_struct.params, cfg, axis_sizes,
+                zero_axes=daxes),
+            mtl=_replicated(state_struct.mtl),
+            step=P(),
+        )
+        batch_struct = shp.batch_struct(cfg, shape)
+        batch_spec = {k: shd.batch_pspec(k, v.shape, axis_sizes, daxes)
+                      for k, v in batch_struct.items()}
+        moe_spec = (P(daxes, "model", None)
+                    if cfg.moe and shape.seq % msize == 0
+                    else P(daxes, None, None)) if cfg.moe else None
+        fn = make_train_step(cfg, opt, ctx, moe_token_spec=moe_spec,
+                             unroll=unroll, remat=remat)
+        return (fn, (state_struct, batch_struct),
+                (named(state_spec), named(batch_spec)), ctx)
+
+    params_struct = jax.eval_shape(
+        lambda k: __import__("repro.models", fromlist=["init_params"])
+        .init_params(k, cfg), key)
+    param_spec = shd.param_pspecs(params_struct, cfg, axis_sizes)
+
+    if shape.kind == "prefill":
+        batch_struct = shp.batch_struct(cfg, shape)
+        batch_spec = {k: shd.batch_pspec(k, v.shape, axis_sizes, daxes)
+                      for k, v in batch_struct.items()}
+        moe_spec = (P(daxes, "model", None)
+                    if cfg.moe and shape.seq % msize == 0
+                    else P(daxes, None, None)) if cfg.moe else None
+        fn = make_prefill_step(cfg, ctx, moe_token_spec=moe_spec,
+                               s_max=shape.seq, unroll=unroll)
+        return (fn, (params_struct, batch_struct),
+                (named(param_spec), named(batch_spec)), ctx)
+
+    # decode
+    cache_struct = jax.eval_shape(
+        partial(serving.init_cache, cfg, shape.batch, shape.seq))
+    cache_spec = shd.cache_pspecs(cache_struct, axis_sizes, daxes)
+    token_struct, pos_struct = shp.decode_structs(cfg, shape)
+    token_spec = shd.batch_pspec("token", token_struct.shape, axis_sizes,
+                                 daxes)
+    moe_spec = P(daxes if shape.batch > 1 else None, None, None) \
+        if cfg.moe else None
+    fn = make_decode_step(cfg, ctx, moe_token_spec=moe_spec, unroll=unroll)
+    return (fn, (params_struct, cache_struct, token_struct, pos_struct),
+            (named(param_spec), named(cache_spec), named(token_spec),
+             NamedSharding(mesh, P())), ctx)
+
+
+def param_counts(cfg: ArchConfig) -> tuple[float, float]:
+    """(total params, active params) from the abstract param tree."""
+    from repro.models import init_params
+    struct = jax.eval_shape(partial(init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(struct)[0]
+    total = expert_n = 0
+    for path, leaf in flat:
+        n = math.prod(leaf.shape)
+        total += n
+        names = [getattr(k, "key", str(k)) for k in path]
+        # routed expert weights: .../moe/{w_in,w_out,w_gate}, shape
+        # (E, d, f)-like — +1 leading scan-stack dim in the stacked tree.
+        if "moe" in names and names[-1] in ("w_in", "w_out", "w_gate"):
+            expert_n += n
+    if cfg.moe:
+        active = total - expert_n + expert_n * cfg.moe.top_k \
+            / cfg.moe.num_experts
+    else:
+        active = total
+    return float(total), float(active)
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool,
+              compile_only: bool = False,
+              unroll: bool | int = 1) -> dict:
+    cfg = get_config(arch)
+    shape = shp.SHAPES[shape_name]
+    ok, reason = shp.applicable(cfg, shape)
+    row = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if unroll not in (1, False):
+        row["unroll"] = True
+    if not ok:
+        row.update(status="skip", reason=reason)
+        return row
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, structs, in_sh, ctx = build_combo(cfg, shape, mesh, unroll=unroll)
+    # donate the train state / the decode KV cache (production semantics:
+    # both are updated in place; without donation every step copies the
+    # whole cache, which dominates the decode memory term)
+    donate = {"train": (0,), "decode": (1,)}.get(shape.kind, ())
+    jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+    with mesh:
+        lowered = jitted.lower(*structs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = collective_bytes(hlo)
+    total_p, active_p = param_counts(cfg)
+
+    row.update(
+        status="ok",
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        flops_per_device=cost.get("flops"),
+        bytes_per_device=cost.get("bytes accessed"),
+        collective_bytes=coll,
+        convert_bytes=convert_bf16_bytes(hlo),
+        params_total=total_p, params_active=active_p,
+        argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+        output_bytes=getattr(mem, "output_size_in_bytes", None),
+        temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+        generated_code_bytes=getattr(mem, "generated_code_size_in_bytes",
+                                     None),
+    )
+    print(f"[dryrun] {arch} x {shape_name} x {row['mesh']}: "
+          f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+          f"flops/dev={row['flops_per_device']} "
+          f"temp={row['temp_bytes']}", flush=True)
+    print(f"[dryrun]   memory_analysis: {mem}", flush=True)
+    return row
+
+
+def _with_periods(cfg: ArchConfig, k: int) -> ArchConfig:
+    import dataclasses
+    n = (len(cfg.head_blocks) + len(cfg.period) * k + len(cfg.tail_blocks))
+    return dataclasses.replace(cfg, num_periods=k, num_layers=n)
+
+
+def _cost_fields(row: dict) -> dict:
+    return {"flops_per_device": row["flops_per_device"] or 0.0,
+            "bytes_per_device": row["bytes_per_device"] or 0.0,
+            "convert_bytes": row.get("convert_bytes") or 0.0,
+            "collective_bytes": dict(row["collective_bytes"])}
+
+
+def _lincomb(c1: dict, c2: dict, p: int) -> dict:
+    """c1 + (p-1) * (c2 - c1): per-period extrapolation of the cost terms."""
+    out = {}
+    for k in ("flops_per_device", "bytes_per_device", "convert_bytes"):
+        out[k] = c1[k] + (p - 1) * (c2[k] - c1[k])
+    out["collective_bytes"] = {
+        kind: c1["collective_bytes"][kind]
+        + (p - 1) * (c2["collective_bytes"][kind]
+                     - c1["collective_bytes"][kind])
+        for kind in c1["collective_bytes"]}
+    return out
+
+
+def _run_variant(cfg: ArchConfig, shape, mesh, unroll,
+                 remat: bool | str = True) -> dict:
+    """lower+compile one cfg variant, return the cost fields."""
+    t0 = time.time()
+    fn, structs, in_sh, _ = build_combo(cfg, shape, mesh, unroll=unroll,
+                                        remat=remat)
+    donate = {"train": (0,), "decode": (1,)}.get(shape.kind, ())
+    jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+    with mesh:
+        compiled = jitted.lower(*structs).compile()
+    cost = compiled.cost_analysis() or {}
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    return {"flops_per_device": cost.get("flops") or 0.0,
+            "bytes_per_device": cost.get("bytes accessed") or 0.0,
+            "collective_bytes": collective_bytes(hlo),
+            "convert_bytes": convert_bf16_bytes(hlo),
+            "compile_s": time.time() - t0}
+
+
+def run_combo_extrapolated(arch: str, shape_name: str,
+                           multi_pod: bool = False,
+                           remat: bool | str = True,
+                           kv_int8: bool = False) -> dict:
+    """Accurate cost terms without the full-unroll compile blow-up:
+
+    compile the model with num_periods=1 and num_periods=2 (scans fully
+    unrolled — tiny), then extrapolate cost = c1 + (P-1)*(c2-c1).  Exact
+    when per-period cost is shape-identical (it is: scanned layers are
+    homogeneous); validated against a true full unroll in tests.
+    """
+    cfg = get_config(arch)
+    if kv_int8:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    shape = shp.SHAPES[shape_name]
+    ok, reason = shp.applicable(cfg, shape)
+    row = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "unroll": "extrapolated"}
+    if kv_int8:
+        row["kv_cache"] = "int8"
+    if not ok:
+        row.update(status="skip", reason=reason)
+        return row
+    if cfg.num_periods < 2:
+        return run_combo(arch, shape_name, multi_pod, unroll=True)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    c1 = _run_variant(_with_periods(cfg, 1), shape, mesh, unroll=True,
+                      remat=remat)
+    c2 = _run_variant(_with_periods(cfg, 2), shape, mesh, unroll=True,
+                      remat=remat)
+    cost = _lincomb(_cost_fields(c1), _cost_fields(c2), cfg.num_periods)
+    total_p, active_p = param_counts(cfg)
+    row.update(status="ok", lower_s=0.0,
+               compile_s=round(time.time() - t0, 1),
+               params_total=total_p, params_active=active_p,
+               argument_bytes=None, output_bytes=None, temp_bytes=None,
+               generated_code_bytes=None, **cost)
+    print(f"[dryrun] {arch} x {shape_name} x {row['mesh']} (extrapolated "
+          f"from P=1,2 to P={cfg.num_periods}): "
+          f"flops/dev={row['flops_per_device']:.3e} "
+          f"compile {row['compile_s']}s", flush=True)
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(shp.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="fully unroll layer scans for accurate "
+                         "cost_analysis (slower compiles)")
+    ap.add_argument("--extrapolate", action="store_true",
+                    help="accurate cost terms via the P=1/P=2 unrolled "
+                         "variants (fast; see run_combo_extrapolated)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8-quantized KV caches (decode combos)")
+    ap.add_argument("--remat", default="full",
+                    choices=("full", "dots", "dots_no_batch", "none"),
+                    help="activation-checkpoint policy for train combos")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    remat = False if args.remat == "none" else (
+        True if args.remat == "full" else args.remat)
+
+    combos = ([(a, s) for a in ARCH_NAMES for s in shp.SHAPES]
+              if args.all else [(args.arch, args.shape)])
+    rows = []
+    for arch, shape_name in combos:
+        try:
+            if args.extrapolate:
+                row = run_combo_extrapolated(arch, shape_name,
+                                             args.multi_pod, remat=remat,
+                                             kv_int8=args.kv_int8)
+            else:
+                row = run_combo(arch, shape_name, args.multi_pod,
+                                unroll=True if args.unroll else 1)
+        except Exception as e:  # a dry-run failure is a bug: surface it
+            import traceback
+            traceback.print_exc()
+            row = {"arch": arch, "shape": shape_name,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "status": "fail", "error": f"{type(e).__name__}: {e}"}
+        rows.append(row)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(row) + "\n")
+    bad = [r for r in rows if r["status"] == "fail"]
+    print(f"[dryrun] done: {len(rows)} combos, {len(bad)} failures")
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

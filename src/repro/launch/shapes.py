@@ -1,0 +1,93 @@
+"""The 4 assigned input shapes, applicability matrix, and input_specs().
+
+input_specs() returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation — exactly what
+jit(...).lower() needs for the 512-device dry run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Skip matrix of DESIGN.md §4."""
+    if shape.kind == "decode" and not cfg.has_decode:
+        return False, "encoder-only: no decode step"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "full attention: long_500k requires sub-quadratic"
+    return True, ""
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """Training / prefill batch ShapeDtypeStructs."""
+    b, s = shape.batch, shape.seq
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        batch = {"features": S((b, s, cfg.feature_dim), dtype),
+                 "mask": S((b, s), jnp.bool_),
+                 "targets": S((b, s), jnp.int32)}
+    else:
+        batch = {"tokens": S((b, s), jnp.int32),
+                 "targets": S((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = S((b, cfg.vision_seq, cfg.d_model), dtype)
+    if shape.kind == "train":
+        batch["task_ids"] = S((b,), jnp.int32)
+        batch["mtl_targets"] = S((b,), jnp.float32)
+    return batch
+
+
+def decode_structs(cfg: ArchConfig, shape: ShapeSpec):
+    """(token, pos) structs; the cache struct comes from eval_shape of
+    serving.init_cache."""
+    return S((shape.batch, 1), jnp.int32), S((), jnp.int32)
+
+
+def concrete_batch(cfg: ArchConfig, shape: ShapeSpec, key,
+                   num_tasks: Optional[int] = None) -> dict[str, Any]:
+    """Materialized random batch (smoke tests / examples)."""
+    struct = batch_struct(cfg, shape)
+    t = num_tasks or cfg.mtl.num_tasks
+    out = {}
+    import zlib
+    for name, sd in struct.items():
+        # crc32, not hash(): PYTHONHASHSEED randomizes hash() per process,
+        # which made smoke-test batches non-reproducible
+        k = jax.random.fold_in(key, zlib.crc32(name.encode()) % (2 ** 31))
+        if name in ("tokens", "targets"):
+            out[name] = jax.random.randint(k, sd.shape, 0, cfg.vocab_size)
+        elif name == "task_ids":
+            out[name] = jax.random.randint(k, sd.shape, 0, t)
+        elif name == "mask":
+            out[name] = jax.random.bernoulli(k, 0.3, sd.shape)
+        elif sd.dtype == jnp.int32:
+            out[name] = jnp.zeros(sd.shape, jnp.int32)
+        else:
+            out[name] = (jax.random.normal(k, sd.shape, jnp.float32)
+                         * 0.05).astype(sd.dtype)
+    return out

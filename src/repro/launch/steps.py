@@ -1,0 +1,118 @@
+"""Step builders: train_step / prefill_step / decode_step per architecture.
+
+train_step = backbone forward+backward + smooth optimizer update + one
+mesh-AMTL round on the multi-task head (the paper's technique as a
+first-class feature of every training step — DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.mtl_head import (MTLHeadState, amtl_head_update,
+                                 init_mtl_state, probe_loss, stale_read)
+from repro.core.prox import get_regularizer
+from repro.models import serving
+from repro.models.moe import ParallelCtx
+from repro.models.transformer import forward, init_params
+from repro.optim import Optimizer, cosine_warmup, make_optimizer
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    mtl: MTLHeadState
+    step: Array
+
+
+def default_optimizer(cfg: ArchConfig, lr: float = 3e-4,
+                      total_steps: int = 10000) -> Optimizer:
+    """Adafactor for the 671B MoE (state must fit a pod), AdamW otherwise."""
+    sched = cosine_warmup(lr, warmup=min(500, total_steps // 10),
+                          total=total_steps)
+    if cfg.name.startswith("deepseek"):
+        return make_optimizer("adafactor", sched)
+    return make_optimizer("adamw", sched)
+
+
+def init_train_state(key: Array, cfg: ArchConfig,
+                     optimizer: Optimizer) -> TrainState:
+    params = init_params(key, cfg)
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        mtl=init_mtl_state(cfg.d_model, cfg.mtl),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
+                    ctx: ParallelCtx = ParallelCtx(),
+                    moe_token_spec=None, remat: bool = True,
+                    unroll: bool | int = 1):
+    mtl_cfg = cfg.mtl
+    reg = get_regularizer(mtl_cfg.reg_name)
+
+    def train_step(state: TrainState, batch: dict):
+        key = jax.random.fold_in(jax.random.PRNGKey(17), state.step)
+        k_read, k_act = jax.random.split(key)
+
+        # AMTL backward step (stale read + server prox) — shared between the
+        # probe loss and the head update.
+        v_hat, nu = stale_read(state.mtl, mtl_cfg, k_read)
+        p = reg.prox(v_hat, jnp.asarray(mtl_cfg.eta * mtl_cfg.lam,
+                                        jnp.float32))
+
+        def loss_fn(params):
+            loss, metrics = forward(params, batch, cfg, ctx, remat=remat,
+                                    moe_token_spec=moe_token_spec,
+                                    unroll=unroll)
+            pl = probe_loss(p, metrics["pooled"], batch["task_ids"],
+                            batch["mtl_targets"].astype(jnp.float32))
+            total = loss + mtl_cfg.probe_weight * pl
+            return total, (metrics, pl)
+
+        (total, (metrics, pl)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               state.params, state.step)
+        pooled = jax.lax.stop_gradient(metrics["pooled"])
+        new_mtl, mtl_metrics = amtl_head_update(
+            state.mtl, pooled, batch["task_ids"],
+            batch["mtl_targets"].astype(jnp.float32), mtl_cfg, k_act,
+            read=(p, nu))
+
+        out = {"loss": total, "lm_loss": metrics["lm_loss"],
+               "probe_loss": pl, "aux_loss": metrics["aux_loss"],
+               **mtl_metrics}
+        if "mtp_loss" in metrics:
+            out["mtp_loss"] = metrics["mtp_loss"]
+        return TrainState(new_params, new_opt, new_mtl,
+                          state.step + 1), out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, ctx: ParallelCtx = ParallelCtx(),
+                      moe_token_spec=None, s_max: Optional[int] = None,
+                      remat: bool = True, unroll: bool | int = 1):
+    def prefill_step(params, batch):
+        return serving.prefill(params, batch, cfg, ctx, s_max=s_max,
+                               remat=remat, moe_token_spec=moe_token_spec,
+                               unroll=unroll)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, ctx: ParallelCtx = ParallelCtx(),
+                     moe_token_spec=None, unroll: bool | int = 1):
+    def decode(params, cache, token, pos):
+        return serving.decode_step(params, cache, token, pos, cfg, ctx,
+                                   moe_token_spec=moe_token_spec,
+                                   unroll=unroll)
+    return decode

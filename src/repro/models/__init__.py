@@ -1,0 +1,7 @@
+"""Model substrate: layers, attention, MoE, SSM, RWKV, transformer assembly."""
+from repro.models.moe import ParallelCtx
+from repro.models.transformer import forward, init_params, scan_groups
+from repro.models.serving import decode_step, init_cache, prefill
+
+__all__ = ["ParallelCtx", "forward", "init_params", "scan_groups",
+           "decode_step", "init_cache", "prefill"]

@@ -1,0 +1,124 @@
+"""Shared layer primitives: norms, activations, RoPE, embeddings, dense FFN.
+
+Params are plain nested dicts of jnp arrays (no flax); init fns return the
+dict, apply fns are pure.  Compute dtype follows the input; params are cast
+at the call site by `astype` on the matmul operand so fp32 master / bf16
+compute policies compose.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ----------------------------------------------------------------- init ----
+
+def dense_init(key: Array, shape: tuple[int, ...], dtype,
+               scale: float | None = None) -> Array:
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, dim: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32)
+            / math.sqrt(dim)).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms ---
+
+def init_norm(kind: str, dim: int, dtype) -> dict:
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(kind: str, p: dict, x: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        out = x32 * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        out = ((x32 - mu) * jax.lax.rsqrt(var + eps)
+               * p["scale"].astype(jnp.float32)
+               + p["bias"].astype(jnp.float32))
+    else:
+        raise ValueError(kind)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ activations --
+
+def activate(name: str, up: Array, gate: Optional[Array]) -> Array:
+    if name == "swiglu":
+        return jax.nn.silu(gate) * up
+    if name == "geglu":
+        return jax.nn.gelu(gate) * up
+    if name == "relu2":
+        r = jax.nn.relu(up)
+        return r * r
+    if name == "gelu":
+        return jax.nn.gelu(up)
+    raise ValueError(name)
+
+
+def is_gated(name: str) -> bool:
+    return name in ("swiglu", "geglu")
+
+
+# ----------------------------------------------------------------- FFN -----
+
+def init_ffn(key: Array, d_model: int, d_ff: int, activation: str,
+             dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], (d_model, d_ff), dtype),
+         "w_out": dense_init(ks[1], (d_ff, d_model), dtype)}
+    if is_gated(activation):
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def apply_ffn(p: dict, x: Array, activation: str) -> Array:
+    up = x @ p["w_in"].astype(x.dtype)
+    gate = x @ p["w_gate"].astype(x.dtype) if "w_gate" in p else None
+    h = activate(activation, up, gate)
+    return h @ p["w_out"].astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE ----
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- softcap ----
+
+def softcap(x: Array, cap: Optional[float]) -> Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

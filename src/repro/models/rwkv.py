@@ -1,0 +1,198 @@
+"""RWKV-6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+The WKV recurrence is computed in chunked (matmul) form for training and
+prefill — the TPU adaptation of the CUDA wkv6 kernel: per-channel decays
+are carried in log-space cumulative sums within a chunk, intra-chunk
+interactions become two MXU matmuls, and a short `lax.scan` carries the
+(H, D, D) state across chunks.  Decode is the exact O(1) recurrence.
+
+Simplification vs. the full Finch ddlerp (DESIGN.md §4): static per-channel
+token-shift mixing coefficients for r/k/v/g, LoRA data-dependence on the
+decay w only (the part the paper highlights as "data-dependent decay").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_norm, dense_init, init_norm
+
+Array = jax.Array
+
+
+class RWKVState(NamedTuple):
+    x_prev_att: Array   # (B, D) previous token (time-mix shift)
+    x_prev_ffn: Array   # (B, D) previous token (channel-mix shift)
+    wkv: Array          # (B, H, D_head, D_head) fp32 state
+
+
+def init_rwkv(key: Array, cfg: ArchConfig, dtype) -> dict:
+    r = cfg.rwkv
+    d = cfg.d_model
+    h = d // r.head_size
+    ks = jax.random.split(key, 10)
+    return {
+        "mix": 0.5 * jnp.ones((5, d), dtype),        # r,k,v,w,g shift mixes
+        "wr": dense_init(ks[0], (d, d), dtype),
+        "wk": dense_init(ks[1], (d, d), dtype),
+        "wv": dense_init(ks[2], (d, d), dtype),
+        "wg": dense_init(ks[3], (d, d), dtype),
+        "wo": dense_init(ks[4], (d, d), dtype),
+        "w0": -6.0 * jnp.ones((d,), jnp.float32),    # base decay (large)
+        "w_lora_a": dense_init(ks[5], (d, r.decay_lora), dtype),
+        "w_lora_b": dense_init(ks[6], (r.decay_lora, d), dtype, scale=0.01),
+        "u": jnp.zeros((h, r.head_size), jnp.float32),   # bonus
+        "ln_x": init_norm("layernorm", d, dtype),    # per-head group norm
+        # channel mix
+        "mix_ffn": 0.5 * jnp.ones((d,), dtype),
+        "ck": dense_init(ks[7], (d, cfg.d_ff), dtype),
+        "cv": dense_init(ks[8], (cfg.d_ff, d), dtype),
+        "cr": dense_init(ks[9], (d, d), dtype),
+    }
+
+
+def _shift(x: Array, x_prev: Array | None = None) -> Array:
+    """Token shift: x[t-1] (zeros / provided state at t=0).  x: (B,L,D)."""
+    if x_prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _decays(p: dict, xw: Array) -> Array:
+    """Data-dependent per-channel decay in (0,1): exp(-exp(w0 + lora))."""
+    lora = jnp.tanh(xw @ p["w_lora_a"].astype(xw.dtype)) @ \
+        p["w_lora_b"].astype(xw.dtype)
+    logw = p["w0"] + lora.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logw))                        # (B,L,D)
+
+
+def _wkv_chunked(r: Array, k: Array, v: Array, w: Array, u: Array,
+                 chunk: int, state0: Array | None = None):
+    """Chunked WKV.  r,k,v,w: (B,L,H,D); u: (H,D).  Returns (out, state).
+
+    out_t = r_t . (S_t + u k_t v_t^T);  S_{t+1} = diag(w_t) S_t + k_t v_t^T
+    (S_t is the state BEFORE absorbing token t.)
+    """
+    b, ell0, h, d = r.shape
+    q = min(chunk, ell0)
+    pad = (-ell0) % q
+    if pad:   # decay-neutral padding: k=0 (no contribution), w=1 (no decay)
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    ell = ell0 + pad
+    nc = ell // q
+    rs = lambda t: t.reshape(b, nc, q, h, d).astype(jnp.float32)
+    rc, kc, vc, wc = rs(r), rs(k), rs(v), rs(w)
+
+    logw = jnp.log(jnp.maximum(wc, 1e-30))
+    cum = jnp.cumsum(logw, axis=2)                        # inclusive cumsum
+    cum_excl = cum - logw                                 # exclusive
+
+    # intra-chunk: out_s += sum_{t<s} r_s*prod_{j in [t+1, s)} w_j k_t v_t
+    # att[s,t] = sum_d r_s[d] k_t[d] exp(cum_excl[s,d] - cum[t,d]) for t < s
+    # Factored form exp(cum_excl_s)*exp(-cum_t) can overflow for strong
+    # decay; re-center both factors at half the chunk-total log-decay.
+    mid = 0.5 * cum[:, :, -1:, :, :]                      # (B,nc,1,H,D)
+    r_intra = rc * jnp.exp(cum_excl - mid)                # (B,nc,Q,H,D)
+    k_intra = kc * jnp.exp(mid - cum)
+    att = jnp.einsum("bcshd,bcthd->bchst", r_intra, k_intra)
+    causal = jnp.tril(jnp.ones((q, q), bool), k=-1)       # strictly lower
+    att = jnp.where(causal[None, None, None], att, 0.0)
+    y_intra = jnp.einsum("bchst,bcthd->bcshd", att, vc)
+    # bonus diagonal term: r_s . (u * k_s) v_s
+    bonus = jnp.einsum("bcshd,hd,bcshd->bcsh", rc, u.astype(jnp.float32), kc)
+    y_intra = y_intra + bonus[..., None] * vc
+
+    # chunk state contribution: sum_t (prod_{j>t} w_j) k_t v_t^T
+    k_tail = kc * jnp.exp(cum[:, :, -1:, :, :] - cum)     # (B,nc,Q,H,D)
+    chunk_kv = jnp.einsum("bcthd,bcthe->bchde", k_tail, vc)
+    chunk_decay = jnp.exp(cum[:, :, -1])                  # (B,nc,H,D)
+
+    def scan_fn(s_prev, inp):
+        ckv, dec = inp                                    # (B,H,D,D),(B,H,D)
+        s_new = s_prev * dec[..., None] + ckv
+        return s_new, s_prev
+
+    init = (jnp.zeros((b, h, d, d), jnp.float32) if state0 is None
+            else state0.astype(jnp.float32))
+    s_last, s_prevs = jax.lax.scan(
+        scan_fn, init, (chunk_kv.transpose(1, 0, 2, 3, 4),
+                        chunk_decay.transpose(1, 0, 2, 3)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)            # (B,nc,H,D,D)
+
+    # inter-chunk factor exp(cum_excl) <= 1 (log-decays are negative): safe.
+    y_inter = jnp.einsum("bcshd,bchde->bcshe", rc * jnp.exp(cum_excl),
+                         s_prevs)
+    out = (y_intra + y_inter).reshape(b, ell, h, d)[:, :ell0]
+    return out, s_last
+
+
+def rwkv_time_mix(p: dict, x: Array, cfg: ArchConfig, *,
+                  state: RWKVState | None = None, return_state: bool = False):
+    """Time-mix (the attention replacement).  x: (B, L, D)."""
+    r_cfg = cfg.rwkv
+    b, ell, d = x.shape
+    h = d // r_cfg.head_size
+    xx = _shift(x, state.x_prev_att if state is not None else None)
+    mix = p["mix"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + (xx - x) * mix[i] for i in range(5))
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(b, ell, h, r_cfg.head_size)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(b, ell, h, r_cfg.head_size)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(b, ell, h, r_cfg.head_size)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    w = _decays(p, xw).reshape(b, ell, h, r_cfg.head_size)
+
+    wkv0 = state.wkv if state is not None else None
+    out, s_last = _wkv_chunked(r, k, v, w, p["u"], r_cfg.chunk, wkv0)
+    out = out.reshape(b, ell, d).astype(x.dtype)
+    out = apply_norm("layernorm", p["ln_x"], out)
+    out = (out * g) @ p["wo"].astype(x.dtype)
+    if not return_state:
+        return out
+    return out, s_last, x[:, -1]
+
+
+def rwkv_channel_mix(p: dict, x: Array, *, x_prev: Array | None = None,
+                     return_state: bool = False):
+    """Channel mix (squared-ReLU FFN with token shift)."""
+    xx = _shift(x, x_prev)
+    mix = p["mix_ffn"].astype(x.dtype)
+    xk = x + (xx - x) * mix
+    kk = jax.nn.relu(xk @ p["ck"].astype(x.dtype)) ** 2
+    out = jax.nn.sigmoid(xk @ p["cr"].astype(x.dtype)) * \
+        (kk @ p["cv"].astype(x.dtype))
+    if not return_state:
+        return out
+    return out, x[:, -1]
+
+
+def rwkv_decode_time_mix(p: dict, x1: Array, state: RWKVState,
+                         cfg: ArchConfig):
+    """O(1) decode for time-mix.  x1: (B, 1, D)."""
+    r_cfg = cfg.rwkv
+    b, _, d = x1.shape
+    h = d // r_cfg.head_size
+    xx = state.x_prev_att[:, None]
+    mix = p["mix"].astype(x1.dtype)
+    xr, xk, xv, xw, xg = (x1 + (xx - x1) * mix[i] for i in range(5))
+    r = (xr @ p["wr"].astype(x1.dtype)).reshape(b, h, r_cfg.head_size)
+    k = (xk @ p["wk"].astype(x1.dtype)).reshape(b, h, r_cfg.head_size)
+    v = (xv @ p["wv"].astype(x1.dtype)).reshape(b, h, r_cfg.head_size)
+    g = jax.nn.silu(xg @ p["wg"].astype(x1.dtype))[:, 0]
+    w = _decays(p, xw).reshape(b, h, r_cfg.head_size)
+
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = k32[..., :, None] * v32[..., None, :]            # (B,H,D,D)
+    s = state.wkv
+    out = jnp.einsum("bhd,bhde->bhe", r32,
+                     s + p["u"][None, :, :, None] * kv)
+    s_new = w.astype(jnp.float32)[..., None] * s + kv
+    out = out.reshape(b, d).astype(x1.dtype)
+    out = apply_norm("layernorm", p["ln_x"], out)
+    out = ((out * g) @ p["wo"].astype(x1.dtype))[:, None]
+    return out, s_new, x1[:, 0]

@@ -1,0 +1,309 @@
+"""Prefill & single-token decode across all families.
+
+Cache layout mirrors the scan-group structure: for each group, a pytree of
+per-period-position caches stacked over the group's repeat count, carried
+through `lax.scan` as xs/ys.  Cache kinds:
+
+  attn/global/moe/cross : KVCache (B, S_max, Hkv, hd)   [+ static CrossKV]
+  local                 : KVCache ring buffer (B, window, Hkv, hd)
+  MLA archs             : MLACache (B, S_max, kv_lora) + (B, S_max, rope)
+  mamba                 : SSMState — O(1) in S_max (the long_500k win)
+  rwkv                  : RWKVState — O(1) in S_max
+  shared_attn           : KVCache per invocation
+
+`pos` is a scalar int32: batched serving with aligned positions
+(per-sequence positions are a straightforward extension, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockKind
+from repro.models import attention as attn_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import KVCache, MLACache
+from repro.models.layers import apply_ffn, apply_norm
+from repro.models.moe import ParallelCtx, moe_apply
+from repro.models.rwkv import RWKVState
+from repro.models.ssm import SSMState
+from repro.models.transformer import (Extras, _apply_shared_attn,
+                                      _attn_flavor, apply_block,
+                                      embed_tokens, lm_logits, scan_groups)
+
+Array = jax.Array
+
+
+class CrossKV(NamedTuple):
+    k: Array
+    v: Array
+
+
+def _cache_len(kind: BlockKind, cfg: ArchConfig, s_max: int) -> int:
+    if kind == "local" and cfg.sliding_window:
+        return min(cfg.sliding_window, s_max)
+    return s_max
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=None) -> dict:
+    """Zero-initialized cache pytree (used by decode-only dry runs)."""
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    cache: dict[str, Any] = {}
+    for gi, group in enumerate(scan_groups(cfg)):
+        entry = {}
+        for i, kind in enumerate(group.period):
+            entry[f"b{i}"] = _init_block_cache(kind, cfg, batch, s_max,
+                                               group.n, dtype)
+        cache[f"group{gi}"] = entry
+    return cache
+
+
+def _init_block_cache(kind: BlockKind, cfg: ArchConfig, b: int, s_max: int,
+                      n: int, dtype):
+    cl = _cache_len(kind, cfg, s_max)
+    if kind in ("attn", "local", "global", "moe", "cross", "shared_attn"):
+        if cfg.mla is not None:
+            m = cfg.mla
+            base = MLACache(
+                c_kv=jnp.zeros((n, b, cl, m.kv_lora_rank), dtype),
+                k_rope=jnp.zeros((n, b, cl, m.qk_rope_head_dim), dtype))
+        else:
+            hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            if cfg.kv_cache_dtype == "int8":
+                base = KVCache(
+                    k=jnp.zeros((n, b, cl, hkv, hd), jnp.int8),
+                    v=jnp.zeros((n, b, cl, hkv, hd), jnp.int8),
+                    k_scale=jnp.zeros((n, b, cl, hkv), jnp.float32),
+                    v_scale=jnp.zeros((n, b, cl, hkv), jnp.float32))
+            else:
+                base = KVCache(k=jnp.zeros((n, b, cl, hkv, hd), dtype),
+                               v=jnp.zeros((n, b, cl, hkv, hd), dtype))
+        if kind == "cross":
+            hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            xkv = CrossKV(
+                k=jnp.zeros((n, b, cfg.vision_seq, hkv, hd), dtype),
+                v=jnp.zeros((n, b, cfg.vision_seq, hkv, hd), dtype))
+            return {"self": base, "cross": xkv}
+        return base
+    if kind == "mamba":
+        d_inner, n_heads, conv_dim = ssm_lib._dims(cfg)
+        s = cfg.ssm
+        return SSMState(
+            conv=jnp.zeros((n, b, s.conv_width - 1, conv_dim), dtype),
+            ssm=jnp.zeros((n, b, n_heads, s.head_dim, s.state_dim),
+                          jnp.float32))
+    if kind == "rwkv":
+        h = cfg.d_model // cfg.rwkv.head_size
+        return RWKVState(
+            x_prev_att=jnp.zeros((n, b, cfg.d_model), dtype),
+            x_prev_ffn=jnp.zeros((n, b, cfg.d_model), dtype),
+            wkv=jnp.zeros((n, b, h, cfg.rwkv.head_size, cfg.rwkv.head_size),
+                          jnp.float32))
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _prefill_block(kind: BlockKind, p: dict, x: Array, cfg: ArchConfig,
+                   ctx: ParallelCtx, extras: Extras, s_max: int):
+    """Full-seq forward that also materializes the block's cache."""
+    cl = _cache_len(kind, cfg, s_max)
+    if kind in ("attn", "local", "global", "moe", "cross"):
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        out, cache = _attn_flavor(p["attn"], h, cfg, kind,
+                                  return_cache=True, cache_len=cl, ctx=ctx)
+        x = x + out
+        if kind == "cross":
+            h = apply_norm(cfg.norm, p["norm_x"], x)
+            x = x + attn_lib.cross_attn_forward(p["xattn"], h,
+                                                extras.vision_embeds, cfg)
+            xkv = _cross_kv(p["xattn"], extras.vision_embeds, cfg, x.dtype)
+            cache = {"self": cache, "cross": xkv}
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        if kind == "moe":
+            y, _ = moe_apply(p["moe"], h, cfg, ctx, extras.moe_token_spec)
+            x = x + y
+        else:
+            x = x + apply_ffn(p["ffn"], h, cfg.activation)
+        return x, cache
+    if kind == "mamba":
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        out, state = ssm_lib.mamba_forward(p["mamba"], h, cfg,
+                                           return_state=True)
+        return x + out, state
+    if kind == "rwkv":
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        out, wkv, x_att = rwkv_lib.rwkv_time_mix(p["rwkv"], h, cfg,
+                                                 return_state=True)
+        x = x + out
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        out, x_ffn = rwkv_lib.rwkv_channel_mix(p["rwkv"], h,
+                                               return_state=True)
+        return x + out, RWKVState(x_att, x_ffn, wkv)
+    if kind == "shared_attn":
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        out, cache = _apply_shared_attn(p, extras.shared_attn, h, cfg,
+                                        return_cache=True, cache_len=cl)
+        x = x + out
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        x = x + apply_ffn(extras.shared_attn["ffn"], h, cfg.activation)
+        return x, cache
+    raise ValueError(kind)
+
+
+def _cross_kv(p: dict, kv_src: Array, cfg: ArchConfig, dtype) -> CrossKV:
+    b, sv, _ = kv_src.shape
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = (kv_src.astype(dtype) @ p["wk"].astype(dtype)).reshape(b, sv, hkv, hd)
+    v = (kv_src.astype(dtype) @ p["wv"].astype(dtype)).reshape(b, sv, hkv, hd)
+    return CrossKV(k=k, v=v)
+
+
+def prefill(params: dict, batch: dict, cfg: ArchConfig,
+            ctx: ParallelCtx = ParallelCtx(), s_max: Optional[int] = None,
+            remat: bool = True, moe_token_spec=None,
+            unroll: bool | int = 1):
+    """Run the prompt; returns (last-position logits, cache)."""
+    extras = Extras(vision_embeds=batch.get("vision_embeds"),
+                    shared_attn=params.get("shared_attn"),
+                    moe_token_spec=moe_token_spec)
+    if cfg.family == "audio":      # encoder inference: no masking, no cache
+        from repro.models.transformer import embed_audio
+        feats = batch["features"]
+        mask = batch.get("mask", jnp.zeros(feats.shape[:2], bool))
+        x = embed_audio(params, feats, mask, cfg)
+        s_max = s_max if s_max is not None else feats.shape[1]
+    else:
+        tokens = batch["tokens"]
+        s_max = s_max if s_max is not None else tokens.shape[1]
+        x = embed_tokens(params, tokens, cfg)
+    cache: dict[str, Any] = {}
+    for gi, group in enumerate(scan_groups(cfg)):
+        stacked = params[f"group{gi}"]
+
+        def body(xx, layer_params, _group=group):
+            caches = {}
+            for i, kind in enumerate(_group.period):
+                xx, c = _prefill_block(kind, layer_params[f"b{i}"], xx, cfg,
+                                       ctx, extras, s_max)
+                caches[f"b{i}"] = c
+            return xx, caches
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, group_cache = jax.lax.scan(body, x, stacked, unroll=unroll)
+        cache[f"group{gi}"] = group_cache
+    logits = lm_logits(params, x[:, -1:], cfg)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _decode_block(kind: BlockKind, p: dict, x: Array, cache, pos: Array,
+                  cfg: ArchConfig, ctx: ParallelCtx, extras: Extras):
+    if kind in ("attn", "local", "global", "moe", "cross"):
+        self_cache = cache["self"] if kind == "cross" else cache
+        window = cfg.sliding_window if kind == "local" else None
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        if cfg.mla is not None:
+            if ctx.mesh is not None:
+                out, new_cache = attn_lib.mla_decode_sharded(
+                    p["attn"], h, self_cache, pos, cfg, ctx)
+            else:
+                out, new_cache = attn_lib.mla_decode(p["attn"], h,
+                                                     self_cache, pos, cfg)
+        elif ctx.mesh is not None:
+            out, new_cache = attn_lib.attn_decode_sharded(
+                p["attn"], h, self_cache, pos, cfg, ctx, window=window)
+        else:
+            out, new_cache = attn_lib.attn_decode(p["attn"], h, self_cache,
+                                                  pos, cfg, window=window)
+        x = x + out
+        if kind == "cross":
+            h = apply_norm(cfg.norm, p["norm_x"], x)
+            x = x + _cross_decode(p["xattn"], h, cache["cross"], cfg)
+            new_cache = {"self": new_cache, "cross": cache["cross"]}
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        if kind == "moe":
+            y, _ = moe_apply(p["moe"], h, cfg, ctx, extras.moe_token_spec)
+            x = x + y
+        else:
+            x = x + apply_ffn(p["ffn"], h, cfg.activation)
+        return x, new_cache
+    if kind == "mamba":
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        out, state = ssm_lib.mamba_decode(p["mamba"], h, cache, cfg)
+        return x + out, state
+    if kind == "rwkv":
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        out, wkv, x_att = rwkv_lib.rwkv_decode_time_mix(p["rwkv"], h, cache,
+                                                        cfg)
+        x = x + out
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        out, x_ffn = rwkv_lib.rwkv_channel_mix(
+            p["rwkv"], h, x_prev=cache.x_prev_ffn, return_state=True)
+        return x + out, RWKVState(x_att, x_ffn, wkv)
+    if kind == "shared_attn":
+        sp = dict(extras.shared_attn["attn"])
+        sp["wq"] = sp["wq"] + (p["lora_q_a"] @ p["lora_q_b"]).astype(
+            sp["wq"].dtype)
+        sp["wo"] = sp["wo"] + (p["lora_o_a"] @ p["lora_o_b"]).astype(
+            sp["wo"].dtype)
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        if ctx.mesh is not None:
+            out, new_cache = attn_lib.attn_decode_sharded(sp, h, cache, pos,
+                                                          cfg, ctx)
+        else:
+            out, new_cache = attn_lib.attn_decode(sp, h, cache, pos, cfg)
+        x = x + out
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        x = x + apply_ffn(extras.shared_attn["ffn"], h, cfg.activation)
+        return x, new_cache
+    raise ValueError(kind)
+
+
+def _cross_decode(p: dict, x: Array, xkv: CrossKV, cfg: ArchConfig) -> Array:
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, 1, h, hd)
+    out = attn_lib.mha(q, xkv.k.astype(x.dtype), xkv.v.astype(x.dtype),
+                       causal=False)
+    out = out.reshape(b, 1, -1) @ p["wo"].astype(x.dtype)
+    return jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype) * out
+
+
+def decode_step(params: dict, cache: dict, token: Array, pos: Array,
+                cfg: ArchConfig, ctx: ParallelCtx = ParallelCtx(),
+                moe_token_spec=None, unroll: bool | int = 1):
+    """One decode step.  token: (B, 1) int32; pos: scalar int32.
+    Returns (logits (B, 1, V) fp32, new_cache)."""
+    extras = Extras(shared_attn=params.get("shared_attn"),
+                    moe_token_spec=moe_token_spec)
+    x = embed_tokens(params, token, cfg)
+    new_cache: dict[str, Any] = {}
+    for gi, group in enumerate(scan_groups(cfg)):
+        stacked = params[f"group{gi}"]
+        gcache = cache[f"group{gi}"]
+
+        def body(xx, scanned, _group=group):
+            layer_params, layer_cache = scanned
+            new_caches = {}
+            for i, kind in enumerate(_group.period):
+                xx, c = _decode_block(kind, layer_params[f"b{i}"], xx,
+                                      layer_cache[f"b{i}"], pos, cfg, ctx,
+                                      extras)
+                new_caches[f"b{i}"] = c
+            return xx, new_caches
+
+        x, group_cache = jax.lax.scan(body, x, (stacked, gcache),
+                                      unroll=unroll)
+        new_cache[f"group{gi}"] = group_cache
+    logits = lm_logits(params, x, cfg)
+    return logits, new_cache

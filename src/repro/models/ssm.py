@@ -1,0 +1,202 @@
+"""Mamba2 block (SSD — state-space duality, chunked) for Zamba2.
+
+Chunked SSD algorithm (Dao & Gu 2024) in pure jnp: within-chunk interactions
+are masked matmuls (MXU-friendly), across-chunk state is a short `lax.scan`
+over L/chunk steps carrying h in (H, P, N).  Decode is the O(1) recurrent
+step on (conv_state, ssm_state).  TPU adaptation note (DESIGN.md §3): the
+CUDA kernel's warp-level scan becomes chunk matmuls sized for the MXU
+(chunk=128) — same math, hardware-native blocking.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_norm, dense_init, init_norm
+
+Array = jax.Array
+
+
+class SSMState(NamedTuple):
+    conv: Array   # (B, conv_width-1, conv_dim) rolling conv inputs
+    ssm: Array    # (B, H, P, N) recurrent state
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.state_dim
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba(key: Array, cfg: ArchConfig, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z (gate), x, B, C, dt]
+    out_dim = d_inner + conv_dim + n_heads
+    p = {
+        "in_proj": dense_init(ks[0], (d, out_dim), dtype),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_dim), dtype,
+                             scale=1.0 / s.conv_width),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": init_norm("rmsnorm", d_inner, dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d), dtype),
+    }
+    return p
+
+
+def _split_proj(cfg: ArchConfig, proj: Array):
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    gn = s.n_groups * s.state_dim
+    z, xbc, dt = jnp.split(proj, [d_inner, d_inner + conv_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over (B, L, C) with window len(w)."""
+    kw = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (kw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(kw))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x: Array, dt: Array, a_log: Array, b_mat: Array,
+                 c_mat: Array, d_skip: Array, chunk: int,
+                 h0: Array | None = None):
+    """SSD scan.  x: (B,L,H,P); dt: (B,L,H); b,c: (B,L,G,N).
+
+    Returns y (B,L,H,P) and final state (B,H,P,N).
+    """
+    bsz, ell0, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    q = min(chunk, ell0)
+    pad = (-ell0) % q
+    if pad:   # neutral padding: dt=0 => decay exp(0)=1 and zero input
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ell = ell0 + pad
+    nc = ell // q
+
+    a = -jnp.exp(a_log)                                    # (H,)
+    dta = dt * a                                           # (B,L,H) log-decay
+    xb = x * dt[..., None]                                 # discretized input
+
+    # reshape into chunks
+    r = lambda t: t.reshape(bsz, nc, q, *t.shape[2:])
+    xc, dtac = r(xb), r(dta)
+    bc = jnp.repeat(r(b_mat), rep, axis=3)                 # (B,nc,Q,H,N)
+    cc = jnp.repeat(r(c_mat), rep, axis=3)
+
+    la = jnp.cumsum(dtac, axis=2)                          # (B,nc,Q,H)
+    # within-chunk: att[s,t] = exp(la_s - la_t) * (C_s . B_t), s >= t
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcshn,bcthn->bcsth", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))            # (B,nc,Q,Q,H)
+    y_diag = jnp.einsum("bcsth,bcsth,bcthp->bcshp",
+                        scores, decay, xc.astype(jnp.float32))
+
+    # chunk states: sum_t exp(la_last - la_t) B_t x_t
+    last = la[:, :, -1:, :]                                # (B,nc,1,H)
+    w_t = jnp.exp(last - la)                               # (B,nc,Q,H)
+    states = jnp.einsum("bcthn,bcth,bcthp->bchpn",
+                        bc.astype(jnp.float32), w_t,
+                        xc.astype(jnp.float32))            # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(last[:, :, 0])                   # (B,nc,H)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp                                      # (B,H,P,N),(B,H)
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev
+
+    init = (jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    h_last, h_prevs = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+
+    # inter-chunk: y_s += exp(la_s) C_s . h_prev
+    y_inter = jnp.einsum("bcshn,bcsh,bchpn->bcshp",
+                         cc.astype(jnp.float32), jnp.exp(la), h_prevs)
+    y = (y_diag + y_inter).reshape(bsz, ell, h, p)
+    y = y + d_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y[:, :ell0].astype(x.dtype), h_last
+
+
+def mamba_forward(p: dict, x: Array, cfg: ArchConfig, *,
+                  return_state: bool = False):
+    """Training/prefill forward.  x: (B, L, D)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    bsz, ell, _ = x.shape
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                       p["conv_b"].astype(x.dtype))
+    xi, b_mat, c_mat = jnp.split(
+        xbc, [d_inner, d_inner + s.n_groups * s.state_dim], axis=-1)
+    xi = xi.reshape(bsz, ell, n_heads, s.head_dim)
+    b_mat = b_mat.reshape(bsz, ell, s.n_groups, s.state_dim)
+    c_mat = c_mat.reshape(bsz, ell, s.n_groups, s.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, h_last = _ssd_chunked(xi, dt, p["A_log"], b_mat, c_mat, p["D"],
+                             s.chunk)
+    y = y.reshape(bsz, ell, d_inner)
+    y = apply_norm("rmsnorm", p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(x.dtype)
+    if not return_state:
+        return out
+    kw = s.conv_width - 1
+    _, xbc_raw, _ = _split_proj(cfg, proj)       # pre-conv inputs
+    conv_state = xbc_raw[:, -kw:] if ell >= kw else jnp.pad(
+        xbc_raw, ((0, 0), (kw - ell, 0), (0, 0)))
+    return out, SSMState(conv=conv_state, ssm=h_last.astype(jnp.float32))
+
+
+def mamba_decode(p: dict, x: Array, state: SSMState, cfg: ArchConfig):
+    """Single-token recurrent step.  x: (B, 1, D)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    bsz = x.shape[0]
+    proj = x @ p["in_proj"].astype(x.dtype)                # (B,1,out)
+    z, xbc_new, dt = _split_proj(cfg, proj)
+
+    window = jnp.concatenate([state.conv.astype(x.dtype), xbc_new], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(x.dtype)
+    xbc = jax.nn.silu(conv_out)[:, None]                   # (B,1,conv_dim)
+    new_conv = window[:, 1:]
+
+    xi, b_mat, c_mat = jnp.split(
+        xbc, [d_inner, d_inner + s.n_groups * s.state_dim], axis=-1)
+    xi = xi.reshape(bsz, n_heads, s.head_dim)
+    rep = n_heads // s.n_groups
+    b_mat = jnp.repeat(b_mat.reshape(bsz, s.n_groups, s.state_dim), rep, 1)
+    c_mat = jnp.repeat(c_mat.reshape(bsz, s.n_groups, s.state_dim), rep, 1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt1 * a)                                 # (B,H)
+    xb = xi.astype(jnp.float32) * dt1[..., None]
+    h = (state.ssm * dec[:, :, None, None]
+         + xb[:, :, :, None] * b_mat.astype(jnp.float32)[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", h, c_mat.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xi.astype(jnp.float32)
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = apply_norm("rmsnorm", p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, SSMState(conv=new_conv, ssm=h)

@@ -1,0 +1,375 @@
+"""Generic multi-family transformer assembly.
+
+A model is a sequence of scan groups; each group is a repeating period of
+block kinds (DESIGN.md §4's layer patterns), scanned with stacked params
+and per-layer remat.  The same machinery expresses all 10 assigned
+architectures:
+
+    deepseek : [(attn,)x3] + [(moe,)x58]            (MLA everywhere, MTP)
+    gemma2   : [(local, global) x 13]
+    gemma3   : [(local x5, global) x 8]
+    zamba2   : [(mamba x5, shared_attn) x 13] + [(mamba,)x3]
+    llama-v  : [(attn x4, cross) x 8]
+    rwkv6    : [(rwkv,) x 32]           ... etc.
+
+Three entry points per model: `forward` (train / full-sequence),
+`prefill` (forward + cache materialization), `decode_step` (one token).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, BlockKind
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import KVCache, MLACache
+from repro.models.layers import (apply_ffn, apply_norm, dense_init,
+                                 embed_init, init_ffn, init_norm, softcap)
+from repro.models.moe import ParallelCtx
+from repro.models.rwkv import RWKVState
+from repro.models.ssm import SSMState
+
+Array = jax.Array
+
+LORA_RANK = 64   # Zamba2 shared-attention per-invocation LoRA rank
+
+
+class ScanGroup(NamedTuple):
+    period: tuple[BlockKind, ...]
+    n: int
+
+
+def scan_groups(cfg: ArchConfig) -> list[ScanGroup]:
+    groups: list[ScanGroup] = []
+    for blocks in (cfg.head_blocks,):
+        if blocks:
+            if len(set(blocks)) == 1:
+                groups.append(ScanGroup((blocks[0],), len(blocks)))
+            else:
+                groups.append(ScanGroup(tuple(blocks), 1))
+    if cfg.num_periods:
+        groups.append(ScanGroup(tuple(cfg.period), cfg.num_periods))
+    if cfg.tail_blocks:
+        if len(set(cfg.tail_blocks)) == 1:
+            groups.append(ScanGroup((cfg.tail_blocks[0],),
+                                    len(cfg.tail_blocks)))
+        else:
+            groups.append(ScanGroup(tuple(cfg.tail_blocks), 1))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key: Array, kind: BlockKind, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    if kind in ("attn", "local", "global", "moe", "cross"):
+        p = {"norm1": init_norm(cfg.norm, d, dtype)}
+        if cfg.mla is not None:
+            p["attn"] = attn_lib.init_mla(ks[0], cfg, dtype)
+        else:
+            p["attn"] = attn_lib.init_attn(ks[0], cfg, dtype)
+        p["norm2"] = init_norm(cfg.norm, d, dtype)
+        if kind == "moe":
+            p["moe"] = moe_lib.init_moe(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = init_ffn(ks[1], d, cfg.d_ff, cfg.activation, dtype)
+        if kind == "cross":
+            p["norm_x"] = init_norm(cfg.norm, d, dtype)
+            p["xattn"] = attn_lib.init_cross_attn(ks[2], cfg, dtype)
+        return p
+    if kind == "mamba":
+        return {"norm1": init_norm(cfg.norm, d, dtype),
+                "mamba": ssm_lib.init_mamba(ks[0], cfg, dtype)}
+    if kind == "rwkv":
+        return {"norm1": init_norm(cfg.norm, d, dtype),
+                "norm2": init_norm(cfg.norm, d, dtype),
+                "rwkv": rwkv_lib.init_rwkv(ks[0], cfg, dtype)}
+    if kind == "shared_attn":
+        # per-invocation params only: LoRA deltas on wq / wo + norms
+        h, hd = cfg.num_heads, cfg.head_dim
+        return {"norm1": init_norm(cfg.norm, d, dtype),
+                "norm2": init_norm(cfg.norm, d, dtype),
+                "lora_q_a": dense_init(ks[0], (d, LORA_RANK), dtype),
+                "lora_q_b": dense_init(ks[1], (LORA_RANK, h * hd), dtype,
+                                       scale=0.0),
+                "lora_o_a": dense_init(ks[2], (h * hd, LORA_RANK), dtype),
+                "lora_o_b": dense_init(ks[3], (LORA_RANK, d), dtype,
+                                       scale=0.0)}
+    raise ValueError(kind)
+
+
+def init_params(key: Array, cfg: ArchConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    if cfg.feature_dim:
+        params["feat_proj"] = dense_init(keys[0], (cfg.feature_dim,
+                                                   cfg.d_model), dtype)
+        params["mask_emb"] = jnp.zeros((cfg.d_model,), dtype)
+    params["embed"] = embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], (cfg.d_model,
+                                                 cfg.vocab_size), dtype)
+    params["final_norm"] = init_norm(cfg.norm, cfg.d_model, dtype)
+
+    if any(k == "shared_attn" for k in cfg.layer_kinds):
+        sk = jax.random.split(keys[2], 2)
+        params["shared_attn"] = {
+            "attn": attn_lib.init_attn(sk[0], cfg, dtype),
+            "ffn": init_ffn(sk[1], cfg.d_model, cfg.d_ff, cfg.activation,
+                            dtype),
+        }
+
+    for gi, group in enumerate(scan_groups(cfg)):
+        gkeys = jax.random.split(keys[3 + gi % 5], group.n)
+
+        def init_period(k):
+            pks = jax.random.split(k, len(group.period))
+            return {f"b{i}": _init_block(pks[i], kind, cfg, dtype)
+                    for i, kind in enumerate(group.period)}
+
+        params[f"group{gi}"] = jax.vmap(init_period)(gkeys)
+
+    if cfg.mtp:
+        mk = jax.random.split(keys[7], 2)
+        params["mtp"] = {
+            "proj": dense_init(mk[0], (2 * cfg.d_model, cfg.d_model), dtype),
+            "block": _init_block(mk[1], "attn", cfg, dtype),
+            "norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# full-sequence block application (train / prefill)
+# ---------------------------------------------------------------------------
+
+class Extras(NamedTuple):
+    vision_embeds: Optional[Array] = None
+    shared_attn: Optional[dict] = None
+    moe_token_spec: Optional[Any] = None
+
+
+def _attn_flavor(p, x, cfg, kind, *, return_cache=False, cache_len=None,
+                 ctx=None):
+    window = cfg.sliding_window if kind == "local" else None
+    theta = cfg.rope_theta
+    if cfg.mla is not None:
+        return attn_lib.mla_forward(p, x, cfg, ctx=ctx,
+                                    return_cache=return_cache,
+                                    cache_len=cache_len)
+    return attn_lib.attn_forward(p, x, cfg, window=window, theta=theta,
+                                 return_cache=return_cache,
+                                 cache_len=cache_len, ctx=ctx)
+
+
+def _apply_shared_attn(p: dict, shared: dict, x: Array, cfg: ArchConfig,
+                       *, return_cache=False, cache_len=None):
+    """Weight-tied attention with per-invocation LoRA on wq / wo."""
+    sp = dict(shared["attn"])
+    dt = x.dtype
+    sp["wq"] = sp["wq"] + (p["lora_q_a"] @ p["lora_q_b"]).astype(sp["wq"].dtype)
+    sp["wo"] = sp["wo"] + (p["lora_o_a"] @ p["lora_o_b"]).astype(sp["wo"].dtype)
+    del dt
+    return attn_lib.attn_forward(sp, x, cfg, window=None,
+                                 return_cache=return_cache,
+                                 cache_len=cache_len)
+
+
+def apply_block(kind: BlockKind, p: dict, x: Array, cfg: ArchConfig,
+                ctx: ParallelCtx, extras: Extras) -> tuple[Array, Array]:
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local", "global", "moe", "cross"):
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        x = x + _attn_flavor(p["attn"], h, cfg, kind, ctx=ctx)
+        if kind == "cross":
+            h = apply_norm(cfg.norm, p["norm_x"], x)
+            x = x + attn_lib.cross_attn_forward(p["xattn"], h,
+                                                extras.vision_embeds, cfg)
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        if kind == "moe":
+            y, aux = moe_lib.moe_apply(p["moe"], h, cfg, ctx,
+                                       extras.moe_token_spec)
+            x = x + y
+        else:
+            x = x + apply_ffn(p["ffn"], h, cfg.activation)
+        return x, aux
+    if kind == "mamba":
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        return x + ssm_lib.mamba_forward(p["mamba"], h, cfg), aux
+    if kind == "rwkv":
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        x = x + rwkv_lib.rwkv_time_mix(p["rwkv"], h, cfg)
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        x = x + rwkv_lib.rwkv_channel_mix(p["rwkv"], h)
+        return x, aux
+    if kind == "shared_attn":
+        h = apply_norm(cfg.norm, p["norm1"], x)
+        x = x + _apply_shared_attn(p, extras.shared_attn, h, cfg)
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        x = x + apply_ffn(extras.shared_attn["ffn"], h, cfg.activation)
+        return x, aux
+    raise ValueError(kind)
+
+
+REMAT_POLICIES = {
+    "full": None,   # save only the layer boundary, recompute everything
+    "dots": "dots_saveable",
+    "dots_no_batch": "dots_with_no_batch_dims_saveable",
+}
+
+
+def _remat_wrap(body, remat):
+    """remat: False | True ('full') | policy name in REMAT_POLICIES."""
+    if remat is False or remat is None:
+        return body
+    name = "full" if remat is True else remat
+    pol = REMAT_POLICIES[name]
+    if pol is None:
+        return jax.checkpoint(body)
+    return jax.checkpoint(body, policy=getattr(jax.checkpoint_policies,
+                                               pol))
+
+
+def backbone_forward(params: dict, x: Array, cfg: ArchConfig,
+                     ctx: ParallelCtx, extras: Extras,
+                     remat: bool | str = True,
+                     unroll: bool | int = 1) -> tuple[Array, Array]:
+    """Run all scan groups.  x: (B, S, D) embedded input.
+
+    remat: False, True (full per-layer recompute) or a REMAT_POLICIES name
+    — 'dots' saves matmul outputs so the backward pass does not replay the
+    forward collectives (MoE all_to_alls) or the attention inner loop, at
+    the price of more live activation memory (EXPERIMENTS.md §Perf).
+
+    unroll: passed to lax.scan.  The dry-run lowers with unroll=True because
+    XLA's cost_analysis counts a while-loop body ONCE (not x trip count), so
+    rooflines from a scanned module would undercount flops/bytes/collectives
+    by ~num_layers (verified; see EXPERIMENTS.md §Dry-run).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    groups = scan_groups(cfg)
+    for gi, group in enumerate(groups):
+        stacked = params[f"group{gi}"]
+
+        def body(carry, layer_params, _group=group):
+            xx, aa = carry
+            for i, kind in enumerate(_group.period):
+                xx, a = apply_block(kind, layer_params[f"b{i}"], xx, cfg,
+                                    ctx, extras)
+                aa = aa + a
+            return (xx, aa), None
+
+        body = _remat_wrap(body, remat)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), stacked, unroll=unroll)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# embedding / heads
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params: dict, tokens: Array, cfg: ArchConfig) -> Array:
+    e = params["embed"]
+    x = e[tokens]
+    if cfg.tie_embeddings:   # gemma-style scaling
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def embed_audio(params: dict, features: Array, mask: Array,
+                cfg: ArchConfig) -> Array:
+    """features: (B, S, feat); mask: (B, S) — masked-prediction input."""
+    x = features.astype(params["feat_proj"].dtype) @ params["feat_proj"]
+    m = params["mask_emb"].astype(x.dtype)
+    return jnp.where(mask[..., None], m[None, None], x)
+
+
+def lm_logits(params: dict, h: Array, cfg: ArchConfig) -> Array:
+    h = apply_norm(cfg.norm, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].astype(h.dtype).T
+    else:
+        logits = h @ params["unembed"].astype(h.dtype)
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def cross_entropy(logits: Array, targets: Array,
+                  weights: Optional[Array] = None) -> Array:
+    """Mean CE over weighted positions.  logits fp32 (B, S, V)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    if weights is None:
+        return jnp.mean(nll)
+    w = weights.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# public forward (training)
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, batch: dict, cfg: ArchConfig,
+            ctx: ParallelCtx = ParallelCtx(), remat: bool = True,
+            moe_token_spec=None, unroll: bool | int = 1):
+    """Training forward.  Returns (loss, metrics dict incl. 'pooled')."""
+    extras = Extras(vision_embeds=batch.get("vision_embeds"),
+                    shared_attn=params.get("shared_attn"),
+                    moe_token_spec=moe_token_spec)
+    if cfg.family == "audio":
+        x = embed_audio(params, batch["features"], batch["mask"], cfg)
+    else:
+        x = embed_tokens(params, batch["tokens"], cfg)
+    h, aux = backbone_forward(params, x, cfg, ctx, extras, remat,
+                              unroll=unroll)
+    logits = lm_logits(params, h, cfg)
+    if cfg.family == "audio":
+        loss = cross_entropy(logits, batch["targets"],
+                             weights=batch["mask"])
+    else:
+        loss = cross_entropy(logits, batch["targets"])
+
+    metrics = {"lm_loss": loss, "aux_loss": aux}
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * aux
+    if cfg.mtp and "mtp" in params:
+        mtp_loss = _mtp_loss(params, h, batch, cfg, ctx, extras)
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + cfg.mtp_weight * mtp_loss
+    # mean-pooled hidden state for the MTL probe heads (paper integration)
+    pooled = jnp.mean(h.astype(jnp.float32), axis=1)
+    metrics["pooled"] = pooled
+    return loss, metrics
+
+
+def _mtp_loss(params: dict, h: Array, batch: dict, cfg: ArchConfig,
+              ctx: ParallelCtx, extras: Extras) -> Array:
+    """DeepSeek multi-token prediction (depth 1, simplified): combine h_t
+    with emb(token_{t+1}) and predict target_{t+1} (= token t+2)."""
+    mp = params["mtp"]
+    tokens, targets = batch["tokens"], batch["targets"]
+    emb_next = embed_tokens(params, tokens[:, 1:], cfg)        # (B,S-1,D)
+    hh = jnp.concatenate([h[:, :-1].astype(emb_next.dtype), emb_next],
+                         axis=-1)
+    hh = hh @ mp["proj"].astype(hh.dtype)
+    hh, _ = apply_block("attn", mp["block"], hh, cfg, ctx, extras)
+    hh = apply_norm(cfg.norm, mp["norm"], hh)
+    if cfg.tie_embeddings:
+        logits = hh @ params["embed"].astype(hh.dtype).T
+    else:
+        logits = hh @ params["unembed"].astype(hh.dtype)
+    return cross_entropy(softcap(logits.astype(jnp.float32),
+                                 cfg.logit_softcap), targets[:, 1:])

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adamw, sgdm,
+                                    make_optimizer)
+from repro.optim.schedules import constant, cosine_warmup, linear_warmup
+from repro.optim.prox_wrapper import proximal_wrap
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgdm", "make_optimizer",
+           "constant", "cosine_warmup", "linear_warmup", "proximal_wrap"]

@@ -1,0 +1,173 @@
+"""Functional optimizers with mixed-precision master weights.
+
+Policy: model params may be bf16 (compute copy); optimizer state carries an
+fp32 master plus moments.  State sharding (ZeRO-1) is applied by the rule
+engine in `repro.distributed.sharding`, not here.
+
+`adafactor` (factored second moments, no first moment by default) exists so
+deepseek-v3-671b's optimizer state fits a 256-chip pod (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class Optimizer(NamedTuple):
+    name: str
+    init: Callable        # params -> opt_state (pytree)
+    update: Callable      # (grads, opt_state, params, step) -> (params, st)
+
+
+def _cast_like(x32, ref):
+    return x32.astype(ref.dtype)
+
+
+# ----------------------------------------------------------------- AdamW ---
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.array(p, jnp.float32)   # real copy even if fp32
+        return {
+            "master": jax.tree.map(f32, params),
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params),
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params),
+        }
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, mu, nu):
+            g = g.astype(jnp.float32) * scale
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            upd_ = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            m_new = m - lr * (upd_ + weight_decay * m)
+            return m_new, mu, nu
+
+        out = jax.tree.map(upd, grads, state["master"], state["mu"],
+                           state["nu"])
+        master = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(_cast_like, master, params)
+        return new_params, {"master": master, "mu": mu, "nu": nu}
+
+    return Optimizer("adamw", init, update)
+
+
+# -------------------------------------------------------------- Adafactor --
+
+def adafactor(lr_fn, eps: float = 1e-30, decay: float = 0.8,
+              weight_decay: float = 0.0, clip_threshold: float = 1.0
+              ) -> Optimizer:
+    """Factored second moments for >=2D leaves; no first moment."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+    def init(params):
+        def st(p):
+            entry = {"master": jnp.array(p, jnp.float32)}
+            if _factored(p.shape):
+                entry["vr"] = jnp.zeros(p.shape[:-1], jnp.float32)
+                entry["vc"] = jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)
+            else:
+                entry["v"] = jnp.zeros(p.shape, jnp.float32)
+            return entry
+        return jax.tree.map(st, params,
+                            is_leaf=lambda x: isinstance(x, jax.Array))
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        # state has the same outer structure as params with dict leaves:
+        st_leaves = treedef.flatten_up_to(state)
+        new_params, new_states = [], []
+        for g, p, st in zip(flat_g, flat_p, st_leaves):
+            g32 = g.astype(jnp.float32)
+            m = st["master"]
+            if "vr" in st:
+                vr = beta * st["vr"] + (1 - beta) * jnp.mean(
+                    g32 * g32 + eps, axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * jnp.mean(
+                    g32 * g32 + eps, axis=-2)
+                row_mean = jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), eps)
+                denom = jnp.sqrt((vr / row_mean)[..., None]
+                                 * vc[..., None, :])
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * (g32 * g32 + eps)
+                denom = jnp.sqrt(v)
+                new_st = {"v": v}
+            u = g32 / jnp.maximum(denom, eps)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            m_new = m - lr * (u + weight_decay * m)
+            new_st["master"] = m_new
+            new_states.append(new_st)
+            new_params.append(m_new.astype(p.dtype))
+        return (jax.tree.unflatten(treedef, new_params),
+                jax.tree.unflatten(treedef, new_states))
+
+    return Optimizer("adafactor", init, update)
+
+
+# ------------------------------------------------------------------ SGDM ---
+
+def sgdm(lr_fn, momentum: float = 0.9, weight_decay: float = 0.0
+         ) -> Optimizer:
+    def init(params):
+        return {"master": jax.tree.map(lambda p: jnp.array(p, jnp.float32),
+                                       params),
+                "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                   params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+
+        def upd(g, m, mu):
+            g = g.astype(jnp.float32) + weight_decay * m
+            mu = momentum * mu + g
+            return m - lr * mu, mu
+
+        out = jax.tree.map(upd, grads, state["master"], state["mu"])
+        master = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return (jax.tree.map(_cast_like, master, params),
+                {"master": master, "mu": mu})
+
+    return Optimizer("sgdm", init, update)
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                        for l in leaves))
+
+
+def make_optimizer(name: str, lr_fn, **kwargs) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm}[name](
+        lr_fn, **kwargs)

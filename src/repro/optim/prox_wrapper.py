@@ -1,0 +1,51 @@
+"""Proximal composition: any smooth optimizer + a prox on selected leaves.
+
+Generalizes the paper's backward step to arbitrary parameter subsets —
+e.g. nuclear-norm-coupled multi-task heads inside an AdamW-trained
+transformer (the Mesh-AMTL integration), or l2,1 feature selection on an
+embedding table.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import get_regularizer
+from repro.optim.optimizers import Optimizer
+
+
+def proximal_wrap(opt: Optimizer, reg_name: str, lam: float,
+                  select: Callable[[tuple], bool],
+                  eta_ref: float = 1.0) -> Optimizer:
+    """After each smooth update, apply prox_{lr*lam*g} to selected leaves.
+
+    select(path) -> True for leaves the regularizer couples (path is the
+    jax.tree_util key path tuple).
+    """
+    reg = get_regularizer(reg_name)
+
+    def update(grads, state, params, step):
+        new_params, new_state = opt.update(grads, state, params, step)
+
+        def maybe_prox(path, leaf):
+            if not select(tuple(str(getattr(k, "key", getattr(k, "name", k))) for k in path)):
+                return leaf
+            t = jnp.asarray(eta_ref * lam, jnp.float32)
+            mat = leaf if leaf.ndim == 2 else leaf.reshape(leaf.shape[0], -1)
+            out = reg.prox(mat, t)
+            return out.reshape(leaf.shape).astype(leaf.dtype)
+
+        new_params = jax.tree_util.tree_map_with_path(maybe_prox, new_params)
+        # keep the master copy consistent with the projected params
+        if isinstance(new_state, dict) and "master" in new_state:
+            new_master = jax.tree_util.tree_map_with_path(
+                lambda path, m, p: p.astype(jnp.float32)
+                if select(tuple(str(getattr(k, "key", getattr(k, "name", k))) for k in path)) else m,
+                new_state["master"], new_params)
+            new_state = dict(new_state)
+            new_state["master"] = new_master
+        return new_params, new_state
+
+    return Optimizer(f"prox_{opt.name}", opt.init, update)

@@ -1,0 +1,25 @@
+"""Learning-rate schedules (pure fns of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup: int):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        return lr * jnp.minimum(1.0, (s + 1.0) / max(warmup, 1))
+    return fn
+
+
+def cosine_warmup(lr: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1.0) / max(warmup, 1))
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return lr * warm * cos
+    return fn

@@ -1,0 +1,21 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; only launch/dryrun.py forces 512 devices."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="session")
+def small_problem():
+    from repro.core import MTLProblem, make_synthetic
+    prob = make_synthetic(num_tasks=5, samples=50, dim=20, seed=0)
+    xs = jnp.asarray(np.stack(prob.xs), jnp.float32)
+    ys = jnp.asarray(np.stack(prob.ys), jnp.float32)
+    return MTLProblem(xs, ys, "lstsq", "nuclear", 0.1)
+
+
+@pytest.fixture(scope="session")
+def small_optimum(small_problem):
+    from repro.core import reference_optimum
+    return reference_optimum(small_problem, num_iters=1500)

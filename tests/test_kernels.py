@@ -1,0 +1,193 @@
+"""Pallas kernel validation: shape/dtype sweeps vs. the ref.py oracles,
+executed in interpret mode on CPU (kernel bodies run exactly as written)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.km_update import km_update
+from repro.kernels.l21_prox import l21_prox
+from repro.kernels.lstsq_grad import lstsq_grad
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- km_update
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", [(8, 4), (50, 20), (256, 128), (300, 130),
+                                   (1000, 16), (7, 1)])
+def test_km_update_matches_ref(shape, dtype):
+    k = jax.random.PRNGKey(0)
+    kv, kp, kg = jax.random.split(k, 3)
+    v = jax.random.normal(kv, shape, dtype)
+    p = jax.random.normal(kp, shape, dtype)
+    g = jax.random.normal(kg, shape, dtype)
+    eta, eta_k = jnp.asarray(0.05), jnp.asarray(0.8)
+    got = km_update(v, p, g, eta, eta_k, interpret=True)
+    want = ref.km_update_ref(v.astype(jnp.float32), p.astype(jnp.float32),
+                             g.astype(jnp.float32), eta, eta_k)
+    np.testing.assert_allclose(np.asarray(got, np.float32), want, **_tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 150),
+       st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_km_update_property(d, t, eta, eta_k):
+    key = jax.random.PRNGKey(d * 1000 + t)
+    kv, kp, kg = jax.random.split(key, 3)
+    v = jax.random.normal(kv, (d, t))
+    p = jax.random.normal(kp, (d, t))
+    g = jax.random.normal(kg, (d, t))
+    got = km_update(v, p, g, jnp.asarray(eta), jnp.asarray(eta_k),
+                    interpret=True)
+    want = ref.km_update_ref(v, p, g, jnp.asarray(eta), jnp.asarray(eta_k))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- l21_prox
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", [(8, 4), (50, 20), (512, 128), (600, 7),
+                                   (1, 1), (1023, 3)])
+def test_l21_prox_matches_ref(shape, dtype):
+    w = jax.random.normal(jax.random.PRNGKey(1), shape, dtype) * 2.0
+    t = jnp.asarray(0.5)
+    got = l21_prox(w, t, interpret=True)
+    want = ref.l21_prox_ref(w, t)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 600), st.integers(1, 40), st.floats(1e-3, 5.0))
+def test_l21_prox_property(d, t_dim, thresh):
+    w = jax.random.normal(jax.random.PRNGKey(d + t_dim), (d, t_dim)) * 3.0
+    got = l21_prox(w, jnp.asarray(thresh), interpret=True)
+    want = ref.l21_prox_ref(w, jnp.asarray(thresh))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_l21_prox_agrees_with_core_prox():
+    from repro.core.prox import l21_prox as core_l21
+    w = jax.random.normal(jax.random.PRNGKey(2), (100, 10))
+    np.testing.assert_allclose(l21_prox(w, jnp.asarray(0.3), interpret=True),
+                               core_l21(w, jnp.asarray(0.3)),
+                               rtol=1e-5, atol=1e-6)
+
+
+# -------------------------------------------------------------- lstsq_grad
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("shape", [(16, 8), (100, 50), (512, 128), (700, 130),
+                                   (1, 5), (1000, 28)])
+def test_lstsq_grad_matches_ref(shape, dtype):
+    n, d = shape
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = jax.random.normal(kx, (n, d), dtype) / np.sqrt(d)
+    w = jax.random.normal(kw, (d,), dtype)
+    y = jax.random.normal(ky, (n,), dtype)
+    got = lstsq_grad(x, w, y, interpret=True)
+    want = ref.lstsq_grad_ref(x, w, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_lstsq_grad_bf16_accumulates_fp32():
+    n, d = 512, 128
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(4), 3)
+    x = jax.random.normal(kx, (n, d), jnp.bfloat16) / np.sqrt(d)
+    w = jax.random.normal(kw, (d,), jnp.bfloat16)
+    y = jax.random.normal(ky, (n,), jnp.bfloat16)
+    got = np.asarray(lstsq_grad(x, w, y, interpret=True), np.float32)
+    want = np.asarray(ref.lstsq_grad_ref(x, w, y), np.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 700), st.integers(1, 160))
+def test_lstsq_grad_property(n, d):
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(n * 7 + d), 3)
+    x = jax.random.normal(kx, (n, d)) / np.sqrt(max(d, 1))
+    w = jax.random.normal(kw, (d,))
+    y = jax.random.normal(ky, (n,))
+    got = lstsq_grad(x, w, y, interpret=True)
+    want = ref.lstsq_grad_ref(x, w, y)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_lstsq_grad_is_true_gradient():
+    """Oracle itself equals autodiff of ||Xw-y||^2."""
+    n, d = 64, 32
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(5), 3)
+    x = jax.random.normal(kx, (n, d))
+    w = jax.random.normal(kw, (d,))
+    y = jax.random.normal(ky, (n,))
+    auto = jax.grad(lambda ww: jnp.sum((x @ ww - y) ** 2))(w)
+    np.testing.assert_allclose(ref.lstsq_grad_ref(x, w, y), auto,
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- ops layer
+def test_ops_dispatch_cpu_uses_ref():
+    from repro.kernels import ops
+    v = jax.random.normal(jax.random.PRNGKey(6), (32, 8))
+    out = ops.km_update(v, v, v, jnp.asarray(0.1), jnp.asarray(0.5))
+    want = ref.km_update_ref(v, v, v, jnp.asarray(0.1), jnp.asarray(0.5))
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+
+
+# ------------------------------------------------- flash attention kernel
+@pytest.mark.parametrize("s,h,hkv,hd", [(64, 4, 4, 64), (200, 4, 2, 72),
+                                        (256, 8, 1, 128), (100, 2, 2, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(s, h, hkv, hd, dtype):
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = (jax.random.normal(ks[0], (s, h, hd)) * 0.3).astype(dtype)
+    k = (jax.random.normal(ks[1], (s, hkv, hd)) * 0.3).astype(dtype)
+    v = (jax.random.normal(ks[2], (s, hkv, hd)) * 0.3).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    kr = jnp.repeat(k, h // hkv, axis=1)
+    vr = jnp.repeat(v, h // hkv, axis=1)
+    want = ref.sliding_flash_attention_ref(q, kr, vr, window=None)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.integers(16, 180), window=st.integers(4, 64),
+       softcap=st.one_of(st.none(), st.floats(10.0, 50.0)))
+def test_flash_attention_window_softcap_property(s, window, softcap):
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(s), 3)
+    q = jax.random.normal(ks[0], (s, 2, 48)) * 0.3
+    k = jax.random.normal(ks[1], (s, 2, 48)) * 0.3
+    v = jax.random.normal(ks[2], (s, 2, 48)) * 0.3
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              softcap=softcap, interpret=True)
+    want = ref.sliding_flash_attention_ref(q, k, v, window=window,
+                                           softcap=softcap)
+    np.testing.assert_allclose(out, want, atol=3e-5)
+
+
+# ---------------------------------------------------- rwkv6 scan kernel
+@pytest.mark.parametrize("s,h,d", [(64, 2, 64), (200, 3, 64), (128, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan_shapes_dtypes(s, h, d, dtype):
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    r = (jax.random.normal(ks[0], (s, h, d)) * 0.3).astype(dtype)
+    k = (jax.random.normal(ks[1], (s, h, d)) * 0.3).astype(dtype)
+    v = (jax.random.normal(ks[2], (s, h, d)) * 0.3).astype(dtype)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (s, h, d))).astype(dtype)
+    u = (jax.random.normal(ks[4], (h, d)) * 0.3).astype(dtype)
+    out = ops.rwkv6_scan(r, k, v, w, u, interpret=True)
+    want = ref.rwkv6_scan_ref(r, k, v, w, u)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)

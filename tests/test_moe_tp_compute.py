@@ -1,0 +1,52 @@
+"""The tp-compute expert path (F-shard partial FFN + psum, chosen when
+token bytes << weight-shard bytes) must equal the dense dropless oracle.
+Subprocess with 8 fake devices: mesh (data=4, model=2), experts % 2 == 0
+but % 8 != 0 => "model" EP mode with d_expert FSDP over data=4."""
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.moe import ParallelCtx, init_moe, moe_apply, moe_dense, \
+    moe_ep
+
+cfg0 = get_config("dbrx-132b").reduced()
+# 4 experts: % model(2) == 0, % chips(8) != 0 -> "model" mode;
+# d_expert 128 % data(4) == 0 -> fsdp_gather available
+cfg = dataclasses.replace(
+    cfg0, moe=dataclasses.replace(cfg0.moe, num_experts=4, top_k=2,
+                                  d_expert=128, capacity_factor=8.0))
+p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+ctx = ParallelCtx(mesh=mesh, data_axes=("data",), model_axis="model",
+                  ep_data_axis="data")
+
+for b, s, label in ((8, 1, "decode-sized (tp-compute)"),
+                    (8, 64, "train-sized (weight-gather)")):
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model)) * 0.5
+    y_dense, _ = moe_dense(p, x, cfg)
+    with mesh:
+        xs = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
+        y_ep, _ = jax.jit(lambda pp, xx: moe_ep(pp, xx, cfg, ctx,
+                                                P("data", None, None)))(p, xs)
+    err = float(jnp.abs(y_ep - y_dense).max())
+    print(label, "maxerr", err)
+    assert err < 5e-4, (label, err)
+print("OK")
+"""
+
+
+def test_tp_compute_matches_dense():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env={"PYTHONPATH": "src",
+                                       "PATH": "/usr/bin:/bin"},
+                       cwd="/root/repo", timeout=600)
+    assert r.returncode == 0 and "OK" in r.stdout, (
+        r.stdout[-1000:], r.stderr[-3000:])

@@ -1,0 +1,98 @@
+"""Unit + property tests for the proximal operators (paper Eq. III.3/IV.2)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prox import (REGISTRY, get_regularizer, l21_prox, svt,
+                             svt_randomized)
+
+mats = st.tuples(st.integers(2, 24), st.integers(1, 8)).flatmap(
+    lambda dt: st.lists(
+        st.floats(-5, 5, allow_nan=False, width=32),
+        min_size=dt[0] * dt[1], max_size=dt[0] * dt[1],
+    ).map(lambda v: np.asarray(v, np.float32).reshape(dt)))
+
+steps = st.floats(1e-3, 3.0, allow_nan=False)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_prox_zero_step_is_identity(name):
+    reg = get_regularizer(name)
+    w = jax.random.normal(jax.random.PRNGKey(0), (12, 5))
+    np.testing.assert_allclose(reg.prox(w, jnp.asarray(0.0)), w,
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(mats, steps)
+@pytest.mark.parametrize("name", ["nuclear", "l21", "l1", "elastic_net", "ridge"])
+def test_prox_optimality(name, w, t):
+    """prox output minimizes (1/2t)||z-w||^2 + g(z): check vs random z."""
+    reg = get_regularizer(name)
+    w = jnp.asarray(w)
+    p = reg.prox(w, jnp.asarray(t, jnp.float32))
+
+    def moreau(z):
+        return 0.5 / t * jnp.sum((z - w) ** 2) + float(reg.value(z))
+
+    base = moreau(p)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        z = p + jnp.asarray(rng.standard_normal(w.shape) * 0.1, jnp.float32)
+        assert base <= moreau(z) + 1e-3 * max(1.0, abs(float(base)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(mats, steps)
+def test_prox_nonexpansive_nuclear(w, t):
+    """prox is firmly nonexpansive: ||prox(a)-prox(b)|| <= ||a-b||."""
+    a = jnp.asarray(w)
+    b = a + 0.5
+    pa, pb = svt(a, t), svt(b, t)
+    assert float(jnp.linalg.norm(pa - pb)) <= float(jnp.linalg.norm(a - b)) + 1e-4
+
+
+@settings(max_examples=30, deadline=None)
+@given(mats, steps)
+def test_prox_nonexpansive_l21(w, t):
+    a = jnp.asarray(w)
+    b = a * 0.3 + 1.0
+    pa, pb = l21_prox(a, t), l21_prox(b, t)
+    assert float(jnp.linalg.norm(pa - pb)) <= float(jnp.linalg.norm(a - b)) + 1e-4
+
+
+def test_svt_matches_definition():
+    """SVT = U (S - t)_+ V^T exactly (paper Eq. IV.2)."""
+    w = np.random.default_rng(1).standard_normal((20, 6)).astype(np.float32)
+    t = 0.7
+    u, s, vt = np.linalg.svd(w, full_matrices=False)
+    expect = (u * np.maximum(s - t, 0.0)) @ vt
+    np.testing.assert_allclose(svt(jnp.asarray(w), jnp.asarray(t)), expect,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_svt_shrinks_rank():
+    rng = np.random.default_rng(2)
+    w = (rng.standard_normal((30, 8)) @ np.diag([10, 5, 1, .1, .1, .1, .1, .1])
+         @ rng.standard_normal((8, 8))).astype(np.float32)
+    p = np.asarray(svt(jnp.asarray(w), jnp.asarray(3.0)))
+    s = np.linalg.svd(p, compute_uv=False)
+    assert np.sum(s > 1e-4) < np.sum(np.linalg.svd(w, compute_uv=False) > 1e-4)
+
+
+def test_randomized_svt_close_to_exact():
+    rng = np.random.default_rng(3)
+    w = (rng.standard_normal((64, 16)) * 1.0).astype(np.float32)
+    exact = svt(jnp.asarray(w), jnp.asarray(0.5))
+    approx = svt_randomized(jnp.asarray(w), jnp.asarray(0.5), rank=16,
+                            key=jax.random.PRNGKey(0))
+    np.testing.assert_allclose(approx, exact, rtol=1e-3, atol=1e-3)
+
+
+def test_l21_rows_zeroed():
+    w = jnp.asarray([[0.1, 0.1], [3.0, 4.0]], jnp.float32)
+    p = l21_prox(w, jnp.asarray(1.0))
+    np.testing.assert_allclose(p[0], 0.0)          # ||row0|| < t -> zeroed
+    np.testing.assert_allclose(jnp.linalg.norm(p[1]), 4.0, rtol=1e-5)

@@ -1,0 +1,104 @@
+"""attn_decode_sharded (shard_map flash-decode, cache seq-sharded over
+`model`) must match plain attn_decode numerically.  Runs in a subprocess
+with 8 fake host devices so real shard boundaries are exercised."""
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import attention as attn_lib
+from repro.models.attention import KVCache
+from repro.models.moe import ParallelCtx
+
+cfg = get_config("gemma2-2b").reduced()          # has softcap + GQA
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+ctx = ParallelCtx(mesh=mesh, data_axes=("data",), model_axis="model")
+
+key = jax.random.PRNGKey(0)
+p = attn_lib.init_attn(key, cfg, jnp.float32)
+b, s_max = 4, 32
+x = jax.random.normal(jax.random.PRNGKey(1), (b, 1, cfg.d_model),
+                      jnp.float32) * 0.1
+ck = jax.random.normal(jax.random.PRNGKey(2),
+                       (b, s_max, cfg.num_kv_heads, cfg.head_dim)) * 0.1
+cv = jax.random.normal(jax.random.PRNGKey(3), ck.shape) * 0.1
+
+# int8 cache path: quantized flash-decode must track the exact result
+import dataclasses
+from repro.models.attention import quantize_kv
+cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+pos = jnp.asarray(20, jnp.int32)
+cache_f = KVCache(k=ck, v=cv)
+ref_out, _ = attn_lib.attn_decode(p, x, cache_f, pos, cfg)
+kq, ks = quantize_kv(ck)
+vq, vs = quantize_kv(cv)
+with mesh:
+    csp = NamedSharding(mesh, P("data", "model", None, None))
+    ssp = NamedSharding(mesh, P("data", "model", None))
+    qc = KVCache(k=jax.device_put(kq, csp), v=jax.device_put(vq, csp),
+                 k_scale=jax.device_put(ks, ssp),
+                 v_scale=jax.device_put(vs, ssp))
+    out8, nc8 = jax.jit(lambda xx, cc, pp: attn_lib.attn_decode_sharded(
+        p, xx, cc, pp, cfg8, ctx))(x, qc, pos)
+assert nc8.k.dtype == jnp.int8 and nc8.k_scale is not None
+rel = float(jnp.abs(out8 - ref_out).max() / (jnp.abs(ref_out).max() + 1e-9))
+assert rel < 0.05, f"int8 decode rel err {rel}"
+
+for pos_val, window in [(0, None), (5, None), (31, None), (40, 16),
+                        (7, 16)]:
+    w = min(window, s_max) if window else None
+    cache = KVCache(k=ck[:, :w] if w else ck, v=cv[:, :w] if w else cv)
+    pos = jnp.asarray(pos_val, jnp.int32)
+    ref_out, ref_cache = attn_lib.attn_decode(p, x, cache, pos, cfg,
+                                              window=w)
+    with mesh:
+        csp = NamedSharding(mesh, P("data", "model", None, None))
+        sc = KVCache(k=jax.device_put(cache.k, csp),
+                     v=jax.device_put(cache.v, csp))
+        out, ncache = jax.jit(
+            lambda xx, cc, pp: attn_lib.attn_decode_sharded(
+                p, xx, cc, pp, cfg, ctx, window=w))(x, sc, pos)
+    assert jnp.allclose(ref_out, out, atol=2e-5), (
+        pos_val, window, float(jnp.abs(ref_out - out).max()))
+    for a, bb in ((ref_cache.k, ncache.k), (ref_cache.v, ncache.v)):
+        assert jnp.allclose(a, bb, atol=1e-6), (pos_val, window)
+# MLA (deepseek) latent-space sharded decode
+cfg_mla = get_config("deepseek-v3-671b").reduced()
+pm = attn_lib.init_mla(jax.random.PRNGKey(7), cfg_mla, jnp.float32)
+from repro.models.attention import MLACache
+m = cfg_mla.mla
+xm = jax.random.normal(jax.random.PRNGKey(8), (b, 1, cfg_mla.d_model),
+                       jnp.float32) * 0.1
+cm = MLACache(
+    c_kv=jax.random.normal(jax.random.PRNGKey(9),
+                           (b, s_max, m.kv_lora_rank)) * 0.1,
+    k_rope=jax.random.normal(jax.random.PRNGKey(10),
+                             (b, s_max, m.qk_rope_head_dim)) * 0.1)
+for pos_val in (0, 13, 31):
+    pos = jnp.asarray(pos_val, jnp.int32)
+    ref_o, ref_c = attn_lib.mla_decode(pm, xm, cm, pos, cfg_mla)
+    with mesh:
+        csp = NamedSharding(mesh, P("data", "model", None))
+        sc = MLACache(c_kv=jax.device_put(cm.c_kv, csp),
+                      k_rope=jax.device_put(cm.k_rope, csp))
+        o, nc = jax.jit(lambda xx, cc, pp: attn_lib.mla_decode_sharded(
+            pm, xx, cc, pp, cfg_mla, ctx))(xm, sc, pos)
+    assert jnp.allclose(ref_o, o, atol=3e-5), (
+        pos_val, float(jnp.abs(ref_o - o).max()))
+    assert jnp.allclose(ref_c.c_kv, nc.c_kv, atol=1e-6)
+    assert jnp.allclose(ref_c.k_rope, nc.k_rope, atol=1e-6)
+print("OK")
+"""
+
+
+def test_sharded_decode_matches_reference():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env={"PYTHONPATH": "src",
+                                       "PATH": "/usr/bin:/bin"},
+                       cwd="/root/repo", timeout=600)
+    assert r.returncode == 0 and "OK" in r.stdout, r.stderr[-3000:]

@@ -1,0 +1,105 @@
+"""Rule-engine unit tests: pspec assignment, divisibility fallback, ZeRO."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import (batch_pspec, cache_pspec,
+                                        moe_sharding_mode, param_pspec,
+                                        param_pspecs, with_zero)
+
+AX = {"data": 16, "model": 16}
+AX_MP = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_embedding_vocab_sharded():
+    cfg = get_config("granite-8b")
+    assert param_pspec(("embed",), (49152, 4096), cfg, AX) == \
+        P("model", None)
+
+
+def test_attn_projections():
+    cfg = get_config("granite-8b")
+    assert param_pspec(("group0", "b0", "attn", "wq"), (36, 4096, 4096),
+                       cfg, AX) == P(None, None, "model")
+    assert param_pspec(("group0", "b0", "attn", "wo"), (36, 4096, 4096),
+                       cfg, AX) == P(None, "model", None)
+
+
+def test_norms_replicated():
+    cfg = get_config("granite-8b")
+    assert param_pspec(("group0", "b0", "norm1", "scale"), (36, 4096),
+                       cfg, AX) == P(None, None)
+
+
+def test_divisibility_fallback():
+    cfg = get_config("granite-8b")
+    # 28 not divisible by 16 -> replicate that dim
+    assert param_pspec(("group0", "b0", "ffn", "w_in"), (36, 4096, 28),
+                       cfg, AX) == P(None, None, None)
+
+
+def test_moe_modes():
+    ds = get_config("deepseek-v3-671b")
+    assert moe_sharding_mode(ds, AX) == "full"      # 256 % 256 == 0
+    dbrx = get_config("dbrx-132b")
+    assert moe_sharding_mode(dbrx, AX) == "model"   # 16 % 16 == 0
+    # deepseek experts spread over (data, model)
+    assert param_pspec(("group1", "b0", "moe", "w_in"),
+                       (58, 256, 7168, 2048), ds, AX) == \
+        P(None, ("data", "model"), None, None)
+    # dbrx: expert dim over model, FFN dim FSDP'd over data
+    assert param_pspec(("group0", "b0", "moe", "w_in"),
+                       (40, 16, 6144, 10752), dbrx, AX) == \
+        P(None, "model", None, "data")
+    assert param_pspec(("group0", "b0", "moe", "w_out"),
+                       (40, 16, 10752, 6144), dbrx, AX) == \
+        P(None, "model", "data", None)
+
+
+def test_zero_adds_data_axis():
+    spec = with_zero(P(None, "model"), (49152, 4096), AX)
+    assert spec == P("data", "model")
+    # already data-sharded: unchanged
+    spec2 = with_zero(P(("data", "model"), None), (256, 7168), AX)
+    assert spec2 == P(("data", "model"), None)
+    # nothing divisible: unchanged
+    assert with_zero(P(None,), (17,), AX) == P(None)
+
+
+def test_batch_pspec():
+    assert batch_pspec("tokens", (256, 4096), AX) == P("data", None)
+    assert batch_pspec("tokens", (1, 4096), AX) == P(None, None)
+    assert batch_pspec("tokens", (256, 4096), AX_MP,
+                       ("pod", "data")) == P(("pod", "data"), None)
+
+
+def test_cache_pspec_kv():
+    # (n, B, S, Hkv, hd): batch->data, seq->model
+    assert cache_pspec(("group0", "b0", "k"), (36, 128, 32768, 8, 128),
+                       AX) == P(None, "data", "model", None, None)
+    # batch=1 long context: only seq sharded
+    assert cache_pspec(("group0", "b0", "k"), (36, 1, 524288, 8, 128),
+                       AX) == P(None, None, "model", None, None)
+
+
+def test_cache_pspec_states():
+    # rwkv wkv (n, B, H=40, 64, 64): 40 % 16 != 0 -> heads replicated
+    assert cache_pspec(("g", "b0", "wkv"), (32, 128, 40, 64, 64), AX) == \
+        P(None, "data", None, None, None)
+    # zamba ssm (n, B, H=112, P, N): 112 % 16 == 0 -> heads sharded
+    assert cache_pspec(("g", "b0", "ssm"), (13, 128, 112, 64, 64), AX) == \
+        P(None, "data", "model", None, None)
+
+
+def test_full_param_tree_covers_all_leaves():
+    cfg = get_config("zamba2-7b").reduced()
+    from repro.models import init_params
+    params = jax.eval_shape(lambda k: init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = param_pspecs(params, cfg, AX)
+    n_params = len(jax.tree_util.tree_leaves(params))
+    n_specs = len(jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_params == n_specs

@@ -1,0 +1,99 @@
+"""Event-driven simulator tests — the paper's §IV protocol."""
+import numpy as np
+import pytest
+
+from repro.core import (NetworkModel, SimProblem, make_synthetic,
+                        simulate_amtl, simulate_smtl)
+
+
+def test_amtl_faster_than_smtl_under_delay():
+    """Paper Table I direction: AMTL wall-clock < SMTL at equal epochs."""
+    prob = make_synthetic(num_tasks=5, samples=100, dim=50, seed=0)
+    net = NetworkModel(delay_offset=5.0, compute_time=0.1, prox_time=0.05)
+    ra = simulate_amtl(prob, net, num_epochs=10, seed=1,
+                       record_objective=False)
+    rs = simulate_smtl(prob, net, num_epochs=10, seed=1,
+                       record_objective=False)
+    assert ra.total_time < rs.total_time
+
+
+def test_gap_grows_with_task_count():
+    """Paper Fig. 3a: the AMTL/SMTL gap widens with more tasks."""
+    net = NetworkModel(delay_offset=2.0, compute_time=0.1, prox_time=0.02)
+    ratios = []
+    for T in (5, 15):
+        prob = make_synthetic(num_tasks=T, samples=100, dim=50, seed=0)
+        ra = simulate_amtl(prob, net, num_epochs=5, seed=1,
+                           record_objective=False)
+        rs = simulate_smtl(prob, net, num_epochs=5, seed=1,
+                           record_objective=False)
+        ratios.append(rs.total_time / ra.total_time)
+    assert ratios[1] > ratios[0] * 0.9  # non-decreasing advantage (noisy)
+    assert ratios[1] > 1.0
+
+
+def test_smtl_time_scales_with_offset():
+    """Paper Table I rows: SMTL-30 >> SMTL-5."""
+    prob = make_synthetic(num_tasks=5, samples=50, dim=20, seed=0)
+    times = []
+    for off in (5.0, 30.0):
+        net = NetworkModel(delay_offset=off)
+        times.append(simulate_smtl(prob, net, num_epochs=5, seed=0,
+                                   record_objective=False).total_time)
+    assert times[1] > times[0] * 4
+
+
+def test_amtl_objective_decreases():
+    prob = make_synthetic(num_tasks=5, samples=50, dim=20, seed=0)
+    net = NetworkModel(delay_offset=1.0)
+    res = simulate_amtl(prob, net, num_epochs=30, seed=0)
+    assert res.objectives[-1] < res.objectives[0]
+
+
+def test_dynamic_step_lowers_objective_under_delay():
+    """Paper Tables IV-VI: at a fixed iteration budget with delays, the
+    dynamic step size reaches a lower objective."""
+    prob = make_synthetic(num_tasks=10, samples=100, dim=50, seed=0)
+    net = NetworkModel(delay_offset=10.0, compute_time=0.1, prox_time=0.05)
+    fixed = simulate_amtl(prob, net, num_epochs=10, seed=3,
+                          dynamic_step=False)
+    dyn = simulate_amtl(prob, net, num_epochs=10, seed=3, dynamic_step=True)
+    assert dyn.objectives[-1] < fixed.objectives[-1]
+
+
+def test_heterogeneous_losses():
+    """Sec. III-A: regression + classification tasks mixed."""
+    rng = np.random.default_rng(0)
+    xs = [rng.standard_normal((40, 10)) for _ in range(4)]
+    w = rng.standard_normal(10)
+    ys = [x @ w + 0.1 * rng.standard_normal(40) for x in xs]
+    losses = ["lstsq", "logistic", "lstsq", "logistic"]
+    ys = [np.where(y > 0, 1.0, -1.0) if l == "logistic" else y
+          for y, l in zip(ys, losses)]
+    prob = SimProblem(xs, ys, losses, "nuclear", 0.05)
+    net = NetworkModel(delay_offset=0.5)
+    res = simulate_amtl(prob, net, num_epochs=40, seed=0)
+    assert res.objectives[-1] < res.objectives[0]
+    assert np.isfinite(res.objectives[-1])
+
+
+def test_ragged_task_sizes():
+    rng = np.random.default_rng(1)
+    sizes = [22, 251, 100]
+    xs = [rng.standard_normal((n, 28)) for n in sizes]
+    ys = [rng.standard_normal(n) for n in sizes]
+    prob = SimProblem(xs, ys, "lstsq", "nuclear", 0.1)
+    net = NetworkModel(delay_offset=1.0,
+                       compute_time=[n * 1e-3 for n in sizes])
+    res = simulate_amtl(prob, net, num_epochs=20, seed=0)
+    assert res.iterations == 20 * 3
+    assert np.isfinite(res.objectives[-1])
+
+
+def test_determinism_under_seed():
+    prob = make_synthetic(num_tasks=4, samples=30, dim=10, seed=0)
+    net = NetworkModel(delay_offset=2.0)
+    a = simulate_amtl(prob, net, num_epochs=10, seed=7)
+    b = simulate_amtl(prob, net, num_epochs=10, seed=7)
+    assert a.total_time == b.total_time
+    np.testing.assert_array_equal(a.w, b.w)

@@ -1,0 +1,87 @@
+"""Property-based invariants of the event-driven AMTL simulator,
+including the beyond-paper features (SGD-AMTL, prox batching)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import NetworkModel, make_synthetic, simulate_amtl, \
+    simulate_smtl
+
+
+def _net(offset=0.5):
+    return NetworkModel(delay_offset=offset, delay_jitter=0.1,
+                        compute_time=0.05, prox_time=0.01)
+
+
+@settings(max_examples=10, deadline=None)
+@given(tasks=st.integers(2, 8), epochs=st.integers(1, 5),
+       seed=st.integers(0, 100))
+def test_event_count_and_monotone_clock(tasks, epochs, seed):
+    prob = make_synthetic(num_tasks=tasks, samples=20, dim=8, seed=seed)
+    r = simulate_amtl(prob, _net(), epochs, seed=seed)
+    assert r.iterations == tasks * epochs
+    assert all(b >= a for a, b in zip(r.event_times, r.event_times[1:]))
+    assert r.total_time == r.event_times[-1]
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_single_task_zero_delay_is_backward_forward(seed):
+    """T=1, no staleness, eta_k=1 => exact backward-forward iteration."""
+    prob = make_synthetic(num_tasks=1, samples=30, dim=6, seed=seed)
+    net = NetworkModel(delay_offset=0.0, delay_jitter=0.0,
+                       compute_time=0.01, prox_time=0.01)
+    epochs = 7
+    r = simulate_amtl(prob, net, epochs, eta_k=1.0, tau=0, seed=seed,
+                      record_objective=False)
+    eta = 1.0 / prob.lipschitz()
+    v = np.zeros((prob.dim, 1))
+    for _ in range(epochs):
+        p = prob.prox(v, eta * prob.lam)
+        g = prob.task_grad(0, p[:, 0])
+        v = p - eta * g[:, None]
+    w_ref = prob.prox(v, eta * prob.lam)
+    assert np.allclose(r.w, w_ref, atol=1e-10)
+
+
+@settings(max_examples=6, deadline=None)
+@given(tasks=st.integers(2, 6), seed=st.integers(0, 50))
+def test_objective_decreases(tasks, seed):
+    prob = make_synthetic(num_tasks=tasks, samples=40, dim=10, seed=seed)
+    r = simulate_amtl(prob, _net(), 15, eta_k=1.0, seed=seed)
+    assert r.objectives[-1] < r.objectives[0]
+
+
+@settings(max_examples=6, deadline=None)
+@given(tasks=st.integers(2, 5), k=st.integers(2, 6),
+       seed=st.integers(0, 50))
+def test_prox_batching_saves_server_time(tasks, k, seed):
+    prob = make_synthetic(num_tasks=tasks, samples=20, dim=8, seed=seed)
+    net = NetworkModel(delay_offset=0.2, delay_jitter=0.0,
+                       compute_time=0.05, prox_time=0.5)  # prox-dominated
+    r1 = simulate_amtl(prob, net, 5, seed=seed, record_objective=False)
+    rk = simulate_amtl(prob, net, 5, seed=seed, record_objective=False,
+                       prox_every=k)
+    assert rk.iterations == r1.iterations
+    assert rk.total_time < r1.total_time
+
+
+@settings(max_examples=6, deadline=None)
+@given(tasks=st.integers(2, 5), seed=st.integers(0, 50))
+def test_full_batch_sgd_equals_full_gradient(tasks, seed):
+    """batch_size == n is the exact full gradient (order-invariant sum)."""
+    prob = make_synthetic(num_tasks=tasks, samples=25, dim=8, seed=seed)
+    r_full = simulate_amtl(prob, _net(), 4, eta_k=1.0, seed=seed,
+                           record_objective=False)
+    r_sgd = simulate_amtl(prob, _net(), 4, eta_k=1.0, seed=seed,
+                          record_objective=False, batch_size=25)
+    assert np.allclose(r_full.w, r_sgd.w, atol=1e-9)
+
+
+def test_smtl_amtl_same_fixed_point_direction():
+    """Both reach comparable objectives with practical steps."""
+    prob = make_synthetic(num_tasks=6, samples=60, dim=12, seed=3)
+    ra = simulate_amtl(prob, _net(), 40, eta_k=1.0, seed=2,
+                       record_objective=False)
+    rs = simulate_smtl(prob, _net(), 40, seed=2, record_objective=False)
+    oa, os_ = prob.objective(ra.w), prob.objective(rs.w)
+    assert abs(oa - os_) / os_ < 0.05

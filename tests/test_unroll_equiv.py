@@ -1,0 +1,65 @@
+"""unroll=True (dry-run cost-analysis mode) must be numerically identical
+to the production lax.scan path, and the P=1/P=2 cost extrapolation used
+by `dryrun --extrapolate` must reconstruct the full-unroll flops within
+tolerance on a reduced config."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.launch import shapes as shp
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models.transformer import forward
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "zamba2-7b", "dbrx-132b"])
+def test_forward_unroll_matches_scan(arch):
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, num_periods=3,
+                              num_layers=len(cfg.head_blocks)
+                              + 3 * len(cfg.period) + len(cfg.tail_blocks))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = shp.concrete_batch(cfg, shp.ShapeSpec("t", "train", 32, 2),
+                               jax.random.PRNGKey(1))
+    loss_scan, _ = forward(params, batch, cfg, remat=False)
+    loss_unroll, _ = forward(params, batch, cfg, remat=False, unroll=True)
+    assert jnp.allclose(loss_scan, loss_unroll, rtol=1e-5)
+
+
+def test_decode_unroll_matches_scan():
+    cfg = get_config("gemma2-2b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cache = init_cache(cfg, 2, 16)
+    tok = jnp.array([[3], [5]], jnp.int32)
+    pos = jnp.asarray(0, jnp.int32)
+    l1, c1 = decode_step(params, cache, tok, pos, cfg)
+    l2, c2 = decode_step(params, cache, tok, pos, cfg, unroll=True)
+    assert jnp.allclose(l1, l2, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+        assert jnp.allclose(a, b, rtol=1e-5)
+
+
+def test_cost_extrapolation_reconstructs_full_unroll():
+    """flops(P=1) + (P-1)*(flops(P=2)-flops(P=1)) ~= flops(P) unrolled."""
+    cfg0 = get_config("granite-8b").reduced()
+
+    def with_p(k):
+        return dataclasses.replace(
+            cfg0, num_periods=k,
+            num_layers=len(cfg0.head_blocks) + k * len(cfg0.period)
+            + len(cfg0.tail_blocks))
+
+    batch = shp.concrete_batch(cfg0, shp.ShapeSpec("t", "train", 32, 2),
+                               jax.random.PRNGKey(1))
+
+    def flops(cfg):
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        f = jax.jit(lambda p: forward(p, batch, cfg, remat=False,
+                                      unroll=True)[0])
+        return f.lower(params).compile().cost_analysis()["flops"]
+
+    f1, f2, f6 = flops(with_p(1)), flops(with_p(2)), flops(with_p(6))
+    extrapolated = f1 + 5 * (f2 - f1)
+    assert abs(extrapolated - f6) / f6 < 0.12, (extrapolated, f6)
