@@ -1,0 +1,111 @@
+"""AMTL event-engine benchmark: dense full-iterate ring vs delta ring.
+
+Measures events/sec of the jitted event loop (`amtl_events_only`, no
+per-epoch metric tail) at the ISSUE's target scale d=8192, T=128, tau=8 on
+the CPU oracle path, plus the staleness-state memory footprint of each
+engine.  Results are emitted both as CSV rows and as `BENCH_amtl_events.json`
+(schema documented in ROADMAP.md "Performance notes") so perf trajectories
+can be tracked across PRs.
+
+The dense engine is the seed baseline: full f32 SVD prox + O(d*T) ring write
+per event.  The delta engine runs the production configuration: prox
+refreshed every PROX_EVERY events via rank-PROX_RANK randomized SVT, O(d)
+ring writes.  `prox_every=1` equivalence (bitwise) is covered by
+tests/test_amtl_delta.py, not timed here.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import AMTLConfig, MTLProblem, amtl_max_step
+from repro.core.amtl import amtl_events_only
+
+D, T, TAU = 8192, 128, 8
+N_SAMPLES = 4          # tiny per-task n: the engines, not the grads, dominate
+DENSE_EVENTS = 8       # one full SVD per event — keep the baseline affordable
+DELTA_EVENTS = 64
+PROX_EVERY = 8
+PROX_RANK = 16
+JSON_PATH = "BENCH_amtl_events.json"
+
+
+def _problem() -> MTLProblem:
+    kx, ky = jax.random.split(jax.random.PRNGKey(0))
+    xs = jax.random.normal(kx, (T, N_SAMPLES, D)) / np.sqrt(D)
+    ys = jax.random.normal(ky, (T, N_SAMPLES))
+    return MTLProblem(xs, ys, "lstsq", "nuclear", 0.1)
+
+
+def _events_per_sec(problem: MTLProblem, cfg: AMTLConfig, events: int,
+                    reps: int = 3) -> float:
+    v0 = jnp.zeros((D, T), jnp.float32)
+    key = jax.random.PRNGKey(7)
+    run = lambda: jax.block_until_ready(
+        amtl_events_only(problem, cfg, v0, key, events))
+    run()                                   # compile + warm-up
+    best = float("inf")                     # best-of-k: stable under noise
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run()
+        best = min(best, time.perf_counter() - t0)
+    return events / best
+
+
+def _state_bytes(cfg: AMTLConfig) -> dict:
+    itemsize = 4  # f32
+    if cfg.engine == "dense":
+        ring = (cfg.tau + 1) * D * T * itemsize
+        total = ring  # the ring holds every iterate incl. the newest
+    else:
+        ring = (cfg.tau + 1) * D * itemsize + (cfg.tau + 1) * 4
+        total = ring + D * T * itemsize                # + v
+        if cfg.prox_every > 1:
+            total += D * T * itemsize                  # + live p_cache
+    return {"ring_bytes": ring, "state_bytes": total}
+
+
+def run() -> list[Row]:
+    problem = _problem()
+    eta_k = amtl_max_step(TAU, T)
+    dense_cfg = AMTLConfig(eta=0.05, eta_k=eta_k, tau=TAU, engine="dense")
+    delta_cfg = AMTLConfig(eta=0.05, eta_k=eta_k, tau=TAU, engine="delta",
+                           prox_every=PROX_EVERY, prox_rank=PROX_RANK)
+
+    dense_eps = _events_per_sec(problem, dense_cfg, DENSE_EVENTS)
+    delta_eps = _events_per_sec(problem, delta_cfg, DELTA_EVENTS)
+    speedup = delta_eps / max(dense_eps, 1e-12)
+    dense_mem = _state_bytes(dense_cfg)
+    delta_mem = _state_bytes(delta_cfg)
+
+    report = {
+        "config": {"d": D, "T": T, "tau": TAU, "n_samples": N_SAMPLES,
+                   "prox_every": PROX_EVERY, "prox_rank": PROX_RANK,
+                   "backend": jax.default_backend()},
+        "dense": {"events_per_sec": dense_eps,
+                  "us_per_event": 1e6 / dense_eps, **dense_mem},
+        "delta": {"events_per_sec": delta_eps,
+                  "us_per_event": 1e6 / delta_eps, **delta_mem},
+        "speedup_events_per_sec": speedup,
+        "ring_memory_ratio": dense_mem["ring_bytes"] / delta_mem["ring_bytes"],
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+
+    return [
+        Row("amtl_events/dense_ring", 1e6 / dense_eps,
+            f"events/sec={dense_eps:.2f}"),
+        Row("amtl_events/delta_ring", 1e6 / delta_eps,
+            f"events/sec={delta_eps:.2f} speedup={speedup:.2f}x"),
+        Row("amtl_events/ring_memory", 0.0,
+            f"dense={dense_mem['ring_bytes']}B delta={delta_mem['ring_bytes']}B "
+            f"ratio={report['ring_memory_ratio']:.0f}x"),
+        Row("amtl_events/state_memory", 0.0,
+            f"dense={dense_mem['state_bytes']}B "
+            f"delta={delta_mem['state_bytes']}B"),
+    ]

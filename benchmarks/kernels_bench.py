@@ -17,8 +17,8 @@ from repro.kernels import ref
 
 
 def _bench(fn, *args, iters=20) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # single warm-up call; block_until_ready handles tuple/pytree returns
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -36,6 +36,20 @@ def _km_unfused(v, p, g, eta, eta_k):
 @jax.jit
 def _km_fused(v, p, g, eta, eta_k):
     return ref.km_update_ref(v, p, g, eta, eta_k)
+
+
+@jax.jit
+def _amtl_event_unfused(v, p, g, eta, eta_k):
+    step = p - eta * g              # pass 1
+    delta = step - v                # pass 2
+    v_new = v + eta_k * delta       # pass 3
+    old = v + 0.0                   # separate undo-log copy pass
+    return v_new, old
+
+
+@jax.jit
+def _amtl_event_fused(v, p, g, eta, eta_k):
+    return ref.amtl_event_ref(v, p, g, eta, eta_k)
 
 
 @jax.jit
@@ -61,6 +75,15 @@ def run() -> list[Row]:
     us_f = _bench(_km_fused, v, p, g, eta, eta_k)
     rows.append(Row("kernels/km_update_unfused", us_u, f"d={d}xT={t}"))
     rows.append(Row("kernels/km_update_fused", us_f,
+                    f"speedup={us_u / max(us_f, 1e-9):.2f}x"))
+
+    d_col = 8192
+    kv, kp, kg = jax.random.split(jax.random.PRNGKey(1), 3)
+    vc, pc, gc = (jax.random.normal(kk, (d_col,)) for kk in (kv, kp, kg))
+    us_u = _bench(_amtl_event_unfused, vc, pc, gc, eta, eta_k)
+    us_f = _bench(_amtl_event_fused, vc, pc, gc, eta, eta_k)
+    rows.append(Row("kernels/amtl_event_unfused", us_u, f"d={d_col}"))
+    rows.append(Row("kernels/amtl_event_fused", us_f,
                     f"speedup={us_u / max(us_f, 1e-9):.2f}x"))
 
     n, dd = 8192, 512

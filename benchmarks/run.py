@@ -19,9 +19,9 @@ def main() -> None:
                     help="comma-separated benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import (fig3_scaling, fig4_convergence, kernels_bench,
-                            sgd_amtl, table1_timing, table3_public,
-                            table456_dynamic_step)
+    from benchmarks import (amtl_events, fig3_scaling, fig4_convergence,
+                            kernels_bench, sgd_amtl, table1_timing,
+                            table3_public, table456_dynamic_step)
     suites = {
         "table1": table1_timing.run,
         "table3": table3_public.run,
@@ -30,6 +30,7 @@ def main() -> None:
         "table456": table456_dynamic_step.run,
         "sgd_amtl": sgd_amtl.run,
         "kernels": kernels_bench.run,
+        "amtl_events": amtl_events.run,
     }
     names = args.only.split(",") if args.only else list(suites)
 

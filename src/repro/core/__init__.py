@@ -1,10 +1,12 @@
 """AMTL core: the paper's contribution as composable JAX modules."""
-from repro.core.amtl import AMTLConfig, AMTLResult, amtl_solve, default_config
+from repro.core.amtl import (AMTLConfig, AMTLResult, amtl_events_only,
+                             amtl_solve, current_iterate, default_config)
 from repro.core.dynamic_step import DelayHistory, dynamic_multiplier
 from repro.core.losses import MTLProblem, get_loss
 from repro.core.operators import (amtl_max_step, backward, backward_forward,
                                   fixed_point_residual, forward,
-                                  forward_backward, km_block_update, km_step)
+                                  forward_backward, km_block_update, km_step,
+                                  rollback_columns)
 from repro.core.prox import apply_prox, get_regularizer
 from repro.core.simulator import (NetworkModel, SimProblem, SimResult,
                                   make_synthetic, simulate_amtl,
@@ -12,7 +14,8 @@ from repro.core.simulator import (NetworkModel, SimProblem, SimResult,
 from repro.core.smtl import fista_solve, reference_optimum, smtl_solve
 
 __all__ = [
-    "AMTLConfig", "AMTLResult", "amtl_solve", "default_config",
+    "AMTLConfig", "AMTLResult", "amtl_events_only", "amtl_solve",
+    "current_iterate", "default_config", "rollback_columns",
     "DelayHistory", "dynamic_multiplier", "MTLProblem", "get_loss",
     "amtl_max_step", "backward", "backward_forward", "fixed_point_residual",
     "forward", "forward_backward", "km_block_update", "km_step",

@@ -6,12 +6,35 @@ simulation* inside `lax.scan`/`fori_loop`:
 
   event k:  a task t_k is activated (uniform — Poisson thinning under
             Assumption 1);  it reads the server state at staleness nu_k <= tau
-            from a ring buffer of past iterates (stale AND inconsistent reads:
-            every block but its own comes from an older iterate);  the server
-            computes the backward step prox_{eta*lam*g} on that stale copy;
-            the node applies the forward step on its block and writes back
-            with KM relaxation eta_k (Eq. III.4), optionally scaled by the
-            delay-adaptive multiplier (Eq. III.5/III.6).
+            (stale AND inconsistent reads: every block but its own comes from
+            an older iterate);  the server computes the backward step
+            prox_{eta*lam*g} on that stale copy;  the node applies the forward
+            step on its block and writes back with KM relaxation eta_k
+            (Eq. III.4), optionally scaled by the delay-adaptive multiplier
+            (Eq. III.5/III.6).
+
+Two engines implement the same mathematics:
+
+  engine="delta" (default) — the delta ring.  Only ONE full iterate V is kept;
+      each event appends `(task_id, pre-write column)` to a `(tau+1, d)` undo
+      log, and the stale read at staleness nu is reconstructed lazily by
+      rolling back the nu newest log entries (O(tau*d) work, O(tau*d) memory).
+      Per-event state writes are O(d): one column of V plus one ring slot.
+      The fused column math (forward step + KM relaxation + undo-log emit)
+      is the `amtl_event` kernel (`repro.kernels.ops.amtl_event`).
+      The server-side prox can be amortized (`prox_every` — paper §III-C:
+      "the proximal mapping can be also applied after several gradient
+      updates"), with `svt_randomized` as the refresh for the nuclear norm
+      at large d x T (`prox_rank`).
+
+  engine="dense" — the seed engine: a `(tau+1, d, T)` ring of full iterates,
+      O(d*T) HBM writes per event.  Kept as the equivalence baseline; the
+      delta engine reproduces its iterates bitwise under the same PRNG key
+      when `prox_every == 1` and both engines run the same arithmetic
+      dispatch (the CPU oracle path, where `ops.amtl_event` lowers to the
+      same jnp expression as `km_block_update`; on TPU the Pallas kernel
+      may contract FMAs differently, so expect ulp-level, not bitwise,
+      agreement there).
 
 This is bit-faithful to Algorithm 1's mathematics while being jit-compiled,
 deterministic under a PRNG key, and mesh-shardable.  Wall-clock behaviour
@@ -27,8 +50,9 @@ import jax.numpy as jnp
 
 from repro.core.dynamic_step import DelayHistory, dynamic_multiplier
 from repro.core.losses import MTLProblem
-from repro.core.operators import amtl_max_step, backward, km_block_update
-from repro.core.prox import get_regularizer
+from repro.core.operators import (amtl_max_step, backward, km_block_update,
+                                  rollback_columns)
+from repro.core.prox import svt_randomized
 
 Array = jax.Array
 
@@ -42,14 +66,36 @@ class AMTLConfig(NamedTuple):
     # Per-task mean staleness (in events). The sampled delay is
     # min(round(offset_t + U[0,1) * jitter), tau). offsets=None => all zero.
     delay_jitter: float = 1.0
+    # "delta": O(d) per-event state with an undo-log ring (default).
+    # "dense": the seed (tau+1, d, T) full-iterate ring, for equivalence.
+    engine: str = "delta"
+    # Server prox amortization (paper §III-C): refresh the backward step
+    # every K events, reuse the cached prox in between.  K=1 == exact AMTL.
+    prox_every: int = 1
+    # If set (nuclear reg only), prox refreshes use the randomized SVT
+    # sketch at this rank instead of the dense SVD — the large-d*T regime.
+    prox_rank: int | None = None
 
 
 class AMTLState(NamedTuple):
+    """Dense-engine state: the seed full-iterate staleness ring."""
     ring: Array            # (tau+1, d, T) past iterates, ring[ptr] = newest
     ptr: Array             # int32 index of newest iterate
     event: Array           # int32 global event counter
     history: DelayHistory  # per-task recent delays (for dynamic step)
     key: Array             # PRNG
+
+
+class DeltaAMTLState(NamedTuple):
+    """Delta-engine state: one iterate + an O(tau*d) undo log."""
+    v: Array               # (d, T) current iterate (the only full copy)
+    delta_ring: Array      # (tau+1, d) pre-write column per event (undo log)
+    task_ring: Array       # (tau+1,) int32 task written at each event
+    ptr: Array             # int32 slot of the newest event
+    event: Array           # int32 global event counter
+    p_cache: Array         # (d, T) cached server prox (prox_every > 1)
+    history: DelayHistory
+    key: Array
 
 
 class AMTLResult(NamedTuple):
@@ -71,21 +117,60 @@ def init_state(cfg: AMTLConfig, v0: Array, num_tasks: int,
     )
 
 
-def _one_event(problem: MTLProblem, cfg: AMTLConfig,
-               delay_offsets: Array, state: AMTLState) -> AMTLState:
-    """One ARock activation (one line of Algorithm 1's while-loop)."""
+def init_delta_state(cfg: AMTLConfig, v0: Array, num_tasks: int,
+                     key: Array) -> DeltaAMTLState:
     depth = cfg.tau + 1
-    num_tasks = problem.num_tasks
-    key, k_task, k_delay = jax.random.split(state.key, 3)
+    return DeltaAMTLState(
+        v=v0,
+        delta_ring=jnp.zeros((depth, v0.shape[0]), v0.dtype),
+        task_ring=jnp.zeros((depth,), jnp.int32),
+        ptr=jnp.zeros((), jnp.int32),
+        event=jnp.zeros((), jnp.int32),
+        # prox_every=1 recomputes the prox every event and never reads the
+        # cache, so don't carry a dead (d, T) buffer through the loop;
+        # with amortization, event 0 always refreshes before the first read.
+        p_cache=(jnp.zeros_like(v0) if cfg.prox_every > 1
+                 else jnp.zeros((0, 0), v0.dtype)),
+        history=DelayHistory.create(num_tasks, cfg.delay_window),
+        key=key,
+    )
 
+
+def _sample_activation(cfg: AMTLConfig, delay_offsets: Array, key: Array,
+                       num_tasks: int, event: Array):
+    """Shared event sampling: (next key, activated task, staleness nu).
+
+    Identical PRNG consumption in both engines => bitwise-reproducible
+    event sequences across `engine=` choices.
+    """
+    key, k_task, k_delay = jax.random.split(key, 3)
     # Assumption 1: same-rate independent Poisson processes => the next
     # activated node is uniform over tasks.
     t = jax.random.randint(k_task, (), 0, num_tasks)
-
     # Staleness of this node's read (network delay in iterate space).
     raw = delay_offsets[t] + cfg.delay_jitter * jax.random.uniform(k_delay)
     nu = jnp.minimum(jnp.round(raw).astype(jnp.int32),
-                     jnp.minimum(cfg.tau, state.event))
+                     jnp.minimum(cfg.tau, event))
+    return key, t, nu
+
+
+def _km_relaxation(cfg: AMTLConfig, history: DelayHistory, t: Array,
+                   nu: Array):
+    """Record the delay and return (updated history, eta_k for this event)."""
+    history = history.record(t, nu.astype(jnp.float32))
+    if cfg.dynamic_step:
+        eta_k = cfg.eta_k * dynamic_multiplier(history.mean_delay(t))
+    else:
+        eta_k = jnp.asarray(cfg.eta_k, jnp.float32)
+    return history, eta_k
+
+
+def _one_event_dense(problem: MTLProblem, cfg: AMTLConfig,
+                     delay_offsets: Array, state: AMTLState) -> AMTLState:
+    """One ARock activation on the seed full-iterate ring (O(d*T)/event)."""
+    depth = cfg.tau + 1
+    key, t, nu = _sample_activation(cfg, delay_offsets, state.key,
+                                    problem.num_tasks, state.event)
 
     # Stale/inconsistent read: all blocks from iterate (k - nu); the node's
     # own block is current (only node t ever writes block t).
@@ -102,11 +187,7 @@ def _one_event(problem: MTLProblem, cfg: AMTLConfig,
     g_t = problem.task_grad(t, p_t)
 
     # KM relaxation, optionally delay-adaptive (Eq. III.5/III.6).
-    history = state.history.record(t, nu.astype(jnp.float32))
-    if cfg.dynamic_step:
-        eta_k = cfg.eta_k * dynamic_multiplier(history.mean_delay(t))
-    else:
-        eta_k = jnp.asarray(cfg.eta_k, jnp.float32)
+    history, eta_k = _km_relaxation(cfg, state.history, t, nu)
 
     v_t_new = km_block_update(v_cur[:, t], p_t, g_t,
                               jnp.asarray(cfg.eta, p_t.dtype),
@@ -116,6 +197,88 @@ def _one_event(problem: MTLProblem, cfg: AMTLConfig,
     ptr = (state.ptr + 1) % depth
     ring = state.ring.at[ptr].set(v_new)
     return AMTLState(ring, ptr, state.event + 1, history, key)
+
+
+def _one_event_delta(problem: MTLProblem, cfg: AMTLConfig,
+                     delay_offsets: Array,
+                     state: DeltaAMTLState) -> DeltaAMTLState:
+    """One ARock activation on the delta ring (O(d) state writes/event)."""
+    from repro.kernels.ops import amtl_event
+
+    depth = cfg.tau + 1
+    use_randomized = cfg.prox_rank is not None and problem.reg_name == "nuclear"
+    key, t, nu = _sample_activation(cfg, delay_offsets, state.key,
+                                    problem.num_tasks, state.event)
+    # The sketch key is folded off the pre-event key instead of split from
+    # the main chain, so the task/staleness event stream stays identical to
+    # the dense engine even when the randomized refresh is enabled.
+    k_prox = jax.random.fold_in(state.key, 7) if use_randomized else None
+    v = state.v
+
+    def refresh(_):
+        # Lazy stale read: roll back the nu newest undo-log entries, then
+        # patch the node's own (always-current) column.  Only paid when the
+        # server actually recomputes the prox.
+        v_hat = rollback_columns(v, state.delta_ring, state.task_ring,
+                                 state.ptr, nu, cfg.tau)
+        v_hat = v_hat.at[:, t].set(v[:, t])
+        if use_randomized:
+            return svt_randomized(
+                v_hat, jnp.asarray(cfg.eta * problem.lam, v_hat.dtype),
+                rank=cfg.prox_rank, key=k_prox)
+        return backward(problem, v_hat, cfg.eta)
+
+    if cfg.prox_every <= 1:
+        p = refresh(None)
+        p_cache = state.p_cache      # untouched loop carry: no copy
+    else:
+        do_prox = (state.event % cfg.prox_every) == 0
+        p = jax.lax.cond(do_prox, refresh, lambda _: state.p_cache, None)
+        p_cache = p
+
+    p_t = p[:, t]
+    g_t = problem.task_grad(t, p_t)
+
+    history, eta_k = _km_relaxation(cfg, state.history, t, nu)
+
+    # Fused column event: forward step + KM relaxation + undo-log emit.
+    v_t_new, old_col = amtl_event(v[:, t], p_t, g_t,
+                                  jnp.asarray(cfg.eta, p_t.dtype),
+                                  eta_k.astype(p_t.dtype))
+
+    ptr = (state.ptr + 1) % depth
+    return DeltaAMTLState(
+        v=v.at[:, t].set(v_t_new),
+        delta_ring=state.delta_ring.at[ptr].set(old_col),
+        task_ring=state.task_ring.at[ptr].set(t),
+        ptr=ptr,
+        event=state.event + 1,
+        p_cache=p_cache,
+        history=history,
+        key=key,
+    )
+
+
+def _engine(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array):
+    """(initial state, event step fn) for cfg; read V via current_iterate."""
+    if cfg.prox_every < 1:
+        raise ValueError(f"prox_every must be >= 1, got {cfg.prox_every} "
+                         "(1 = exact prox every event)")
+    if cfg.engine == "dense":
+        if cfg.prox_every != 1 or cfg.prox_rank is not None:
+            raise ValueError("engine='dense' is the exact seed baseline; "
+                             "prox_every>1 / prox_rank require "
+                             "engine='delta'")
+        return init_state(cfg, v0, problem.num_tasks, key), _one_event_dense
+    if cfg.engine == "delta":
+        if cfg.prox_rank is not None and problem.reg_name != "nuclear":
+            raise ValueError(
+                "prox_rank selects the randomized SVT refresh, which only "
+                f"exists for reg_name='nuclear' (got {problem.reg_name!r})")
+        return (init_delta_state(cfg, v0, problem.num_tasks, key),
+                _one_event_delta)
+    raise ValueError(f"unknown AMTL engine {cfg.engine!r}; "
+                     "expected 'delta' or 'dense'")
 
 
 @functools.partial(jax.jit,
@@ -135,13 +298,13 @@ def amtl_solve(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array,
     if delay_offsets is None:
         delay_offsets = jnp.zeros((num_tasks,), jnp.float32)
 
-    state0 = init_state(cfg, v0, num_tasks, key)
+    state0, step = _engine(problem, cfg, v0, key)
 
     def epoch(state, _):
         state = jax.lax.fori_loop(
             0, events_per_epoch,
-            lambda _, s: _one_event(problem, cfg, delay_offsets, s), state)
-        v = state.ring[state.ptr]
+            lambda _, s: step(problem, cfg, delay_offsets, s), state)
+        v = current_iterate(state)
         w = backward(problem, v, cfg.eta)
         obj = problem.objective(w)
         from repro.core.operators import fixed_point_residual
@@ -149,9 +312,34 @@ def amtl_solve(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array,
         return state, (obj, res)
 
     state, (objs, ress) = jax.lax.scan(epoch, state0, None, length=num_epochs)
-    v = state.ring[state.ptr]
+    v = current_iterate(state)
     w = backward(problem, v, cfg.eta)
     return AMTLResult(v, w, objs, ress)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_events"))
+def amtl_events_only(problem: MTLProblem, cfg: AMTLConfig, v0: Array,
+                     key: Array, num_events: int,
+                     delay_offsets: Array | None = None):
+    """Run `num_events` activations with NO per-epoch metric tail.
+
+    Returns the final engine state (AMTLState or DeltaAMTLState).  This is
+    the events/sec benchmark path: it isolates the per-event engine cost
+    from the (full-SVD) objective/residual instrumentation of `amtl_solve`.
+    """
+    if delay_offsets is None:
+        delay_offsets = jnp.zeros((problem.num_tasks,), jnp.float32)
+    state0, step = _engine(problem, cfg, v0, key)
+    return jax.lax.fori_loop(
+        0, num_events, lambda _, s: step(problem, cfg, delay_offsets, s),
+        state0)
+
+
+def current_iterate(state) -> Array:
+    """The newest iterate V held by either engine's state."""
+    if isinstance(state, DeltaAMTLState):
+        return state.v
+    return state.ring[state.ptr]
 
 
 def default_config(problem: MTLProblem, tau: int = 4, c: float = 0.9,

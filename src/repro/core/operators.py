@@ -69,6 +69,34 @@ def km_block_update(v_t: Array, prox_t: Array, grad_t: Array,
     return v_t + eta_k * (prox_t - eta * grad_t - v_t)
 
 
+def rollback_columns(v: Array, delta_ring: Array, task_ring: Array,
+                     ptr: Array, nu: Array, tau: int) -> Array:
+    """Reconstruct the iterate from `nu` events ago out of an undo log.
+
+    `delta_ring[s]` holds the exact pre-write bits of column `task_ring[s]`
+    at the event written to slot `s`; `ptr` is the newest event's slot.
+    Restoring the `nu` newest entries newest-first replays each overwritten
+    column back to its stored value, so the result is bitwise identical to
+    the dense ring's `ring[ptr - nu]` — in O(tau*d) work instead of
+    materializing a (tau+1, d, T) ring.
+
+    `tau` is static (loop trip count); `nu <= min(tau, event)` is dynamic
+    and masks which entries actually restore.  A masked-out step writes a
+    column back onto itself, which is a bitwise no-op.
+    """
+    if tau == 0:
+        return v
+    depth = tau + 1
+
+    def undo(j, vh):
+        slot = (ptr - j) % depth          # j=0 -> newest event
+        t_j = task_ring[slot]
+        col = jnp.where(j < nu, delta_ring[slot], vh[:, t_j])
+        return vh.at[:, t_j].set(col)
+
+    return jax.lax.fori_loop(0, tau, undo, v)
+
+
 def fixed_point_residual(problem: MTLProblem, v: Array, eta: float) -> Array:
     """||BF(v) - v||_F — zero exactly at a fixed point of the BF operator."""
     return jnp.linalg.norm(backward_forward(problem, v, eta) - v)

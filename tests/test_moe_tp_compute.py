@@ -5,6 +5,10 @@ but % 8 != 0 => "model" EP mode with d_expert FSDP over data=4."""
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow  # 8-fake-device subprocess; excluded from tier-1
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -3,6 +3,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.prox import (REGISTRY, get_regularizer, l21_prox, svt,

@@ -4,6 +4,10 @@ with 8 fake host devices so real shard boundaries are exercised."""
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow  # 8-fake-device subprocess; excluded from tier-1
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

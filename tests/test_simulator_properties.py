@@ -1,6 +1,9 @@
 """Property-based invariants of the event-driven AMTL simulator,
 including the beyond-paper features (SGD-AMTL, prox batching)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import NetworkModel, make_synthetic, simulate_amtl, \

@@ -58,7 +58,10 @@ def test_cost_extrapolation_reconstructs_full_unroll():
         params = init_params(jax.random.PRNGKey(0), cfg)
         f = jax.jit(lambda p: forward(p, batch, cfg, remat=False,
                                       unroll=True)[0])
-        return f.lower(params).compile().cost_analysis()["flops"]
+        ca = f.lower(params).compile().cost_analysis()
+        if isinstance(ca, list):   # jax <= 0.4.x returns [dict], >= 0.5 dict
+            ca = ca[0]
+        return ca["flops"]
 
     f1, f2, f6 = flops(with_p(1)), flops(with_p(2)), flops(with_p(6))
     extrapolated = f1 + 5 * (f2 - f1)
