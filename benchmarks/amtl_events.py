@@ -1,4 +1,4 @@
-"""AMTL event-engine benchmark: dense full-iterate ring vs delta ring.
+"""AMTL event-engine benchmark: dense ring vs delta ring vs event batch.
 
 Measures events/sec of the jitted event loop (`amtl_events_only`, no
 per-epoch metric tail) at the ISSUE's target scale d=8192, T=128, tau=8 on
@@ -8,10 +8,19 @@ engine.  Results are emitted both as CSV rows and as `BENCH_amtl_events.json`
 can be tracked across PRs.
 
 The dense engine is the seed baseline: full f32 SVD prox + O(d*T) ring write
-per event.  The delta engine runs the production configuration: prox
+per event.  The delta engine runs its production configuration: prox
 refreshed every PROX_EVERY events via rank-PROX_RANK randomized SVT, O(d)
-ring writes.  `prox_every=1` equivalence (bitwise) is covered by
-tests/test_amtl_delta.py, not timed here.
+ring writes.  The batch engine runs EVENT_BATCH events per loop step with
+one rank-PROX_RANK prox per batch and batched conflict-aware column
+updates — the amortization axis the delta engine pays per event (the prox
+`lax.cond` carries a (d, T) cache copy) is hoisted to once per batch.
+Because the batch engine's prox cadence is EVENT_BATCH (not PROX_EVERY), a
+`delta_matched` row runs the delta engine at prox_every=EVENT_BATCH too:
+`batch_over_delta_matched` isolates the batching machinery's gain from the
+cheaper prox schedule, while `batch_over_delta` is the end-to-end win over
+the recorded delta production config.  Engine equivalence (bitwise,
+aligned configs) is covered by tests/test_amtl_delta.py and
+tests/test_amtl_batch.py, not timed here.
 """
 from __future__ import annotations
 
@@ -30,8 +39,12 @@ D, T, TAU = 8192, 128, 8
 N_SAMPLES = 4          # tiny per-task n: the engines, not the grads, dominate
 DENSE_EVENTS = 8       # one full SVD per event — keep the baseline affordable
 DELTA_EVENTS = 64
+BATCH_EVENTS = 256
 PROX_EVERY = 8
 PROX_RANK = 16
+EVENT_BATCH = 32       # CPU sweet spot: larger batches amortize the prox
+                       # further but the per-batch gather/scatter fixed cost
+                       # grows; 32 maximizes events/sec at this scale
 JSON_PATH = "BENCH_amtl_events.json"
 
 
@@ -65,8 +78,10 @@ def _state_bytes(cfg: AMTLConfig) -> dict:
     else:
         ring = (cfg.tau + 1) * D * itemsize + (cfg.tau + 1) * 4
         total = ring + D * T * itemsize                # + v
-        if cfg.prox_every > 1:
+        if cfg.engine == "delta" and cfg.prox_every > 1:
             total += D * T * itemsize                  # + live p_cache
+        # engine="batch" carries no prox cache: the refresh happens
+        # unconditionally at each batch's first event.
     return {"ring_bytes": ring, "state_bytes": total}
 
 
@@ -76,22 +91,44 @@ def run() -> list[Row]:
     dense_cfg = AMTLConfig(eta=0.05, eta_k=eta_k, tau=TAU, engine="dense")
     delta_cfg = AMTLConfig(eta=0.05, eta_k=eta_k, tau=TAU, engine="delta",
                            prox_every=PROX_EVERY, prox_rank=PROX_RANK)
+    # same prox cadence as the batch engine: isolates the batching gain
+    delta_matched_cfg = delta_cfg._replace(prox_every=EVENT_BATCH)
+    batch_cfg = AMTLConfig(eta=0.05, eta_k=eta_k, tau=TAU, engine="batch",
+                           prox_every=EVENT_BATCH, event_batch=EVENT_BATCH,
+                           prox_rank=PROX_RANK)
 
     dense_eps = _events_per_sec(problem, dense_cfg, DENSE_EVENTS)
     delta_eps = _events_per_sec(problem, delta_cfg, DELTA_EVENTS)
-    speedup = delta_eps / max(dense_eps, 1e-12)
+    matched_eps = _events_per_sec(problem, delta_matched_cfg, BATCH_EVENTS)
+    batch_eps = _events_per_sec(problem, batch_cfg, BATCH_EVENTS)
     dense_mem = _state_bytes(dense_cfg)
     delta_mem = _state_bytes(delta_cfg)
+    batch_mem = _state_bytes(batch_cfg)
+    speedup = {
+        "delta_over_dense": delta_eps / max(dense_eps, 1e-12),
+        "batch_over_dense": batch_eps / max(dense_eps, 1e-12),
+        "batch_over_delta": batch_eps / max(delta_eps, 1e-12),
+        "batch_over_delta_matched": batch_eps / max(matched_eps, 1e-12),
+    }
 
     report = {
+        # prox_every is the delta row's cadence; the batch and
+        # delta_matched rows run at prox cadence event_batch.
         "config": {"d": D, "T": T, "tau": TAU, "n_samples": N_SAMPLES,
                    "prox_every": PROX_EVERY, "prox_rank": PROX_RANK,
+                   "event_batch": EVENT_BATCH,
                    "backend": jax.default_backend()},
         "dense": {"events_per_sec": dense_eps,
                   "us_per_event": 1e6 / dense_eps, **dense_mem},
         "delta": {"events_per_sec": delta_eps,
                   "us_per_event": 1e6 / delta_eps, **delta_mem},
-        "speedup_events_per_sec": speedup,
+        "delta_matched": {"events_per_sec": matched_eps,
+                          "us_per_event": 1e6 / matched_eps, **delta_mem},
+        "batch": {"events_per_sec": batch_eps,
+                  "us_per_event": 1e6 / batch_eps, **batch_mem},
+        "speedup": speedup,
+        # kept for cross-PR continuity with the PR-1 schema
+        "speedup_events_per_sec": speedup["delta_over_dense"],
         "ring_memory_ratio": dense_mem["ring_bytes"] / delta_mem["ring_bytes"],
     }
     with open(JSON_PATH, "w") as f:
@@ -101,11 +138,20 @@ def run() -> list[Row]:
         Row("amtl_events/dense_ring", 1e6 / dense_eps,
             f"events/sec={dense_eps:.2f}"),
         Row("amtl_events/delta_ring", 1e6 / delta_eps,
-            f"events/sec={delta_eps:.2f} speedup={speedup:.2f}x"),
+            f"events/sec={delta_eps:.2f} "
+            f"speedup={speedup['delta_over_dense']:.2f}x"),
+        Row("amtl_events/delta_matched", 1e6 / matched_eps,
+            f"events/sec={matched_eps:.2f} (prox_every={EVENT_BATCH})"),
+        Row("amtl_events/event_batch", 1e6 / batch_eps,
+            f"events/sec={batch_eps:.2f} "
+            f"vs_delta={speedup['batch_over_delta']:.2f}x "
+            f"vs_delta_matched={speedup['batch_over_delta_matched']:.2f}x "
+            f"vs_dense={speedup['batch_over_dense']:.2f}x"),
         Row("amtl_events/ring_memory", 0.0,
             f"dense={dense_mem['ring_bytes']}B delta={delta_mem['ring_bytes']}B "
             f"ratio={report['ring_memory_ratio']:.0f}x"),
         Row("amtl_events/state_memory", 0.0,
             f"dense={dense_mem['state_bytes']}B "
-            f"delta={delta_mem['state_bytes']}B"),
+            f"delta={delta_mem['state_bytes']}B "
+            f"batch={batch_mem['state_bytes']}B"),
     ]

@@ -13,7 +13,7 @@ simulation* inside `lax.scan`/`fori_loop`:
             (Eq. III.4), optionally scaled by the delay-adaptive multiplier
             (Eq. III.5/III.6).
 
-Two engines implement the same mathematics:
+Three engines implement the same mathematics:
 
   engine="delta" (default) — the delta ring.  Only ONE full iterate V is kept;
       each event appends `(task_id, pre-write column)` to a `(tau+1, d)` undo
@@ -36,6 +36,21 @@ Two engines implement the same mathematics:
       may contract FMAs differently, so expect ulp-level, not bitwise,
       agreement there).
 
+  engine="batch" — the delta ring, `event_batch` events per loop step.
+      Each step replays `event_batch` draws of the serial PRNG chain (so
+      the (task, staleness) event stream is identical to the one-event
+      engines by construction), performs ONE server prox at the batch's
+      first event (`prox_every` must equal `event_batch` — the amortized
+      schedule of the delta engine, aligned to batch boundaries), and
+      applies all column updates through `ops.amtl_event_batch` (gather ->
+      fused forward/KM/undo-emit -> scatter).  Within-batch conflicts —
+      duplicate tasks — are serialized in event order: a later event reads
+      the column as left by the earlier in-batch write, and its undo-log
+      entry records that pre-write column, so the ring replays exactly as
+      if the events had been applied one at a time.  For aligned configs
+      (`prox_every == event_batch`, same key) the batch engine reproduces
+      the delta engine's iterates bitwise on the CPU oracle path.
+
 This is bit-faithful to Algorithm 1's mathematics while being jit-compiled,
 deterministic under a PRNG key, and mesh-shardable.  Wall-clock behaviour
 (Tables I/III) is studied separately by `repro.core.simulator`.
@@ -51,7 +66,7 @@ import jax.numpy as jnp
 from repro.core.dynamic_step import DelayHistory, dynamic_multiplier
 from repro.core.losses import MTLProblem
 from repro.core.operators import (amtl_max_step, backward, km_block_update,
-                                  rollback_columns)
+                                  rollback_columns, rollback_columns_batch)
 from repro.core.prox import svt_randomized
 
 Array = jax.Array
@@ -68,6 +83,8 @@ class AMTLConfig(NamedTuple):
     delay_jitter: float = 1.0
     # "delta": O(d) per-event state with an undo-log ring (default).
     # "dense": the seed (tau+1, d, T) full-iterate ring, for equivalence.
+    # "batch": the delta ring, event_batch events per loop step with one
+    #          server prox per batch and conflict-aware batched updates.
     engine: str = "delta"
     # Server prox amortization (paper §III-C): refresh the backward step
     # every K events, reuse the cached prox in between.  K=1 == exact AMTL.
@@ -75,6 +92,9 @@ class AMTLConfig(NamedTuple):
     # If set (nuclear reg only), prox refreshes use the randomized SVT
     # sketch at this rank instead of the dense SVD — the large-d*T regime.
     prox_rank: int | None = None
+    # engine="batch" only: activations applied per loop step.  Must equal
+    # prox_every (the batch engine refreshes the prox once per batch).
+    event_batch: int = 1
 
 
 class AMTLState(NamedTuple):
@@ -94,6 +114,23 @@ class DeltaAMTLState(NamedTuple):
     ptr: Array             # int32 slot of the newest event
     event: Array           # int32 global event counter
     p_cache: Array         # (d, T) cached server prox (prox_every > 1)
+    history: DelayHistory
+    key: Array
+
+
+class BatchAMTLState(NamedTuple):
+    """Batch-engine state: the delta ring without the prox cache.
+
+    The batch engine refreshes the server prox unconditionally at each
+    batch's first event (prox_every == event_batch), so no (d, T) cache is
+    carried between loop steps — the per-event `lax.cond` copy of that
+    cache is the delta engine's dominant non-prox cost.
+    """
+    v: Array               # (d, T) current iterate (the only full copy)
+    delta_ring: Array      # (tau+1, d) pre-write column per event (undo log)
+    task_ring: Array       # (tau+1,) int32 task written at each event
+    ptr: Array             # int32 slot of the newest event
+    event: Array           # int32 global event counter
     history: DelayHistory
     key: Array
 
@@ -136,6 +173,20 @@ def init_delta_state(cfg: AMTLConfig, v0: Array, num_tasks: int,
     )
 
 
+def init_batch_state(cfg: AMTLConfig, v0: Array, num_tasks: int,
+                     key: Array) -> BatchAMTLState:
+    depth = cfg.tau + 1
+    return BatchAMTLState(
+        v=v0,
+        delta_ring=jnp.zeros((depth, v0.shape[0]), v0.dtype),
+        task_ring=jnp.zeros((depth,), jnp.int32),
+        ptr=jnp.zeros((), jnp.int32),
+        event=jnp.zeros((), jnp.int32),
+        history=DelayHistory.create(num_tasks, cfg.delay_window),
+        key=key,
+    )
+
+
 def _sample_activation(cfg: AMTLConfig, delay_offsets: Array, key: Array,
                        num_tasks: int, event: Array):
     """Shared event sampling: (next key, activated task, staleness nu).
@@ -152,6 +203,25 @@ def _sample_activation(cfg: AMTLConfig, delay_offsets: Array, key: Array,
     nu = jnp.minimum(jnp.round(raw).astype(jnp.int32),
                      jnp.minimum(cfg.tau, event))
     return key, t, nu
+
+
+def _sample_activation_batch(cfg: AMTLConfig, delay_offsets: Array,
+                             key: Array, num_tasks: int, event: Array,
+                             batch: int):
+    """Replay `batch` steps of the serial PRNG chain in one scan.
+
+    Same splits, same draws, same staleness clamp (`event + i`) as `batch`
+    consecutive calls of `_sample_activation` — the event stream is
+    identical to the one-event engines by construction.  Returns
+    (next key, tasks (batch,), stalenesses (batch,)).
+    """
+    def one(k, i):
+        k, t, nu = _sample_activation(cfg, delay_offsets, k, num_tasks,
+                                      event + i)
+        return k, (t, nu)
+
+    key, (ts, nus) = jax.lax.scan(one, key, jnp.arange(batch))
+    return key, ts, nus
 
 
 def _km_relaxation(cfg: AMTLConfig, history: DelayHistory, t: Array,
@@ -259,26 +329,123 @@ def _one_event_delta(problem: MTLProblem, cfg: AMTLConfig,
     )
 
 
+def _one_batch(problem: MTLProblem, cfg: AMTLConfig, delay_offsets: Array,
+               state: BatchAMTLState) -> BatchAMTLState:
+    """`event_batch` ARock activations in one step (batch engine).
+
+    Serial-replay equivalent: the PRNG chain, the amortized prox schedule
+    (refresh at the batch's first event == events that are multiples of
+    prox_every), the per-event KM arithmetic, and the undo-log contents all
+    match `event_batch` consecutive `_one_event_delta` steps bitwise on the
+    CPU oracle path.
+    """
+    from repro.kernels.ops import amtl_event_batch
+
+    depth = cfg.tau + 1
+    bsz = cfg.event_batch
+    use_randomized = cfg.prox_rank is not None and problem.reg_name == "nuclear"
+    # Folded off the batch-start key — the key the serial engine would hold
+    # at its refresh event (the batch's first event).
+    k_prox = jax.random.fold_in(state.key, 7) if use_randomized else None
+    key, ts, nus = _sample_activation_batch(cfg, delay_offsets, state.key,
+                                            problem.num_tasks, state.event,
+                                            bsz)
+    v = state.v
+
+    # One server prox per batch, at the batch's first event: stale read at
+    # staleness nu_0 (vectorized rollback — one masked scatter), own column
+    # patched current, then the exact or sketched backward step.
+    v_hat = rollback_columns_batch(v, state.delta_ring, state.task_ring,
+                                   state.ptr, nus[0], cfg.tau)
+    v_hat = v_hat.at[:, ts[0]].set(v[:, ts[0]])
+    if use_randomized:
+        p = svt_randomized(v_hat, jnp.asarray(cfg.eta * problem.lam,
+                                              v_hat.dtype),
+                           rank=cfg.prox_rank, key=k_prox)
+    else:
+        p = backward(problem, v_hat, cfg.eta)
+
+    # Per-event forward-step gradients at the batch-constant prox.  g_t
+    # depends only on (t, p[:, t]) — not on v — so duplicates need no
+    # serialization here; the scan body issues the same per-event ops as
+    # the serial engine, keeping the bits identical.
+    p_cols = p[:, ts]                                        # (d, bsz)
+
+    def grad_one(_, inp):
+        t, p_t = inp
+        return None, problem.task_grad(t, p_t)
+
+    _, g_rows = jax.lax.scan(grad_one, None, (ts, p_cols.T))  # (bsz, d)
+
+    # Delay recording / KM relaxation factors, in event order.
+    def relax_one(h, inp):
+        t, nu = inp
+        h, eta_k = _km_relaxation(cfg, h, t, nu)
+        return h, eta_k
+
+    history, eta_ks = jax.lax.scan(relax_one, state.history, (ts, nus))
+
+    # Batched column updates: gather -> fused forward/KM/undo-emit ->
+    # scatter, duplicates serialized in event order inside the op.
+    v_new, undo_cols = amtl_event_batch(
+        v, p_cols, g_rows.T, ts, jnp.asarray(cfg.eta, v.dtype),
+        eta_ks.astype(v.dtype))
+
+    # Ring append, batched.  Only the newest `depth` events can ever be
+    # rolled back (nu <= tau < depth), so when bsz > depth the overwritten
+    # head of the batch is dropped; the surviving slots are distinct and
+    # the scatter is deterministic.
+    keep = min(bsz, depth)
+    slots = (state.ptr + 1 + jnp.arange(bsz - keep, bsz)) % depth
+    return BatchAMTLState(
+        v=v_new,
+        delta_ring=state.delta_ring.at[slots].set(undo_cols[bsz - keep:]),
+        task_ring=state.task_ring.at[slots].set(ts[bsz - keep:]),
+        ptr=(state.ptr + bsz) % depth,
+        event=state.event + bsz,
+        history=history,
+        key=key,
+    )
+
+
 def _engine(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array):
-    """(initial state, event step fn) for cfg; read V via current_iterate."""
+    """(initial state, step fn, events per step) for cfg.
+
+    Read V off the returned state via `current_iterate`.
+    """
     if cfg.prox_every < 1:
         raise ValueError(f"prox_every must be >= 1, got {cfg.prox_every} "
                          "(1 = exact prox every event)")
+    if cfg.event_batch < 1:
+        raise ValueError(f"event_batch must be >= 1, got {cfg.event_batch}")
+    if cfg.engine in ("dense", "delta") and cfg.event_batch != 1:
+        raise ValueError(
+            f"engine={cfg.engine!r} processes one event per step; "
+            f"event_batch={cfg.event_batch} requires engine='batch'")
+    if cfg.prox_rank is not None and problem.reg_name != "nuclear":
+        raise ValueError(
+            "prox_rank selects the randomized SVT refresh, which only "
+            f"exists for reg_name='nuclear' (got {problem.reg_name!r})")
     if cfg.engine == "dense":
         if cfg.prox_every != 1 or cfg.prox_rank is not None:
             raise ValueError("engine='dense' is the exact seed baseline; "
                              "prox_every>1 / prox_rank require "
-                             "engine='delta'")
-        return init_state(cfg, v0, problem.num_tasks, key), _one_event_dense
+                             "engine='delta' or engine='batch'")
+        return (init_state(cfg, v0, problem.num_tasks, key),
+                _one_event_dense, 1)
     if cfg.engine == "delta":
-        if cfg.prox_rank is not None and problem.reg_name != "nuclear":
-            raise ValueError(
-                "prox_rank selects the randomized SVT refresh, which only "
-                f"exists for reg_name='nuclear' (got {problem.reg_name!r})")
         return (init_delta_state(cfg, v0, problem.num_tasks, key),
-                _one_event_delta)
+                _one_event_delta, 1)
+    if cfg.engine == "batch":
+        if cfg.prox_every != cfg.event_batch:
+            raise ValueError(
+                "engine='batch' refreshes the server prox once per batch, "
+                f"so prox_every ({cfg.prox_every}) must equal event_batch "
+                f"({cfg.event_batch})")
+        return (init_batch_state(cfg, v0, problem.num_tasks, key),
+                _one_batch, cfg.event_batch)
     raise ValueError(f"unknown AMTL engine {cfg.engine!r}; "
-                     "expected 'delta' or 'dense'")
+                     "expected 'delta', 'dense', or 'batch'")
 
 
 @functools.partial(jax.jit,
@@ -298,11 +465,15 @@ def amtl_solve(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array,
     if delay_offsets is None:
         delay_offsets = jnp.zeros((num_tasks,), jnp.float32)
 
-    state0, step = _engine(problem, cfg, v0, key)
+    state0, step, per_step = _engine(problem, cfg, v0, key)
+    if events_per_epoch % per_step != 0:
+        raise ValueError(
+            f"events_per_epoch ({events_per_epoch}) must be a multiple of "
+            f"event_batch ({per_step}) for engine={cfg.engine!r}")
 
     def epoch(state, _):
         state = jax.lax.fori_loop(
-            0, events_per_epoch,
+            0, events_per_epoch // per_step,
             lambda _, s: step(problem, cfg, delay_offsets, s), state)
         v = current_iterate(state)
         w = backward(problem, v, cfg.eta)
@@ -323,21 +494,26 @@ def amtl_events_only(problem: MTLProblem, cfg: AMTLConfig, v0: Array,
                      delay_offsets: Array | None = None):
     """Run `num_events` activations with NO per-epoch metric tail.
 
-    Returns the final engine state (AMTLState or DeltaAMTLState).  This is
+    Returns the final engine state (AMTLState, DeltaAMTLState, or
+    BatchAMTLState, matching `cfg.engine`).  This is
     the events/sec benchmark path: it isolates the per-event engine cost
     from the (full-SVD) objective/residual instrumentation of `amtl_solve`.
     """
     if delay_offsets is None:
         delay_offsets = jnp.zeros((problem.num_tasks,), jnp.float32)
-    state0, step = _engine(problem, cfg, v0, key)
+    state0, step, per_step = _engine(problem, cfg, v0, key)
+    if num_events % per_step != 0:
+        raise ValueError(
+            f"num_events ({num_events}) must be a multiple of event_batch "
+            f"({per_step}) for engine={cfg.engine!r}")
     return jax.lax.fori_loop(
-        0, num_events, lambda _, s: step(problem, cfg, delay_offsets, s),
-        state0)
+        0, num_events // per_step,
+        lambda _, s: step(problem, cfg, delay_offsets, s), state0)
 
 
 def current_iterate(state) -> Array:
-    """The newest iterate V held by either engine's state."""
-    if isinstance(state, DeltaAMTLState):
+    """The newest iterate V held by any engine's state."""
+    if isinstance(state, (DeltaAMTLState, BatchAMTLState)):
         return state.v
     return state.ring[state.ptr]
 

@@ -97,6 +97,42 @@ def rollback_columns(v: Array, delta_ring: Array, task_ring: Array,
     return jax.lax.fori_loop(0, tau, undo, v)
 
 
+def rollback_columns_batch(v: Array, delta_ring: Array, task_ring: Array,
+                           ptr: Array, nu: Array, tau: int) -> Array:
+    """Vectorized multi-column rollback: one masked scatter, no fori_loop.
+
+    Bitwise-equal to `rollback_columns`: the newest-first sequential replay
+    ends with the OLDEST restored entry per column winning, so it suffices
+    to select, for each column touched within the rollback window, the
+    entry with the largest offset j < nu and scatter all winners at once.
+    Losers and masked-out slots scatter to column index T, which is out of
+    bounds and dropped (`mode="drop"`).  Winners have distinct column
+    indices, so the scatter is deterministic; the written bits are the
+    stored pre-write bits verbatim.
+
+    The batch engine uses this at its per-batch prox refresh, where the
+    fori_loop's tau sequential (d,)-column writes would serialize for no
+    reason; `rollback_columns` stays as the one-event engines' path and the
+    semantic reference.
+    """
+    if tau == 0:
+        return v
+    depth = tau + 1
+    num_cols = v.shape[1]
+    j = jnp.arange(tau)                              # j=0 -> newest event
+    slots = (ptr - j) % depth
+    tasks = task_ring[slots]                         # (tau,)
+    active = j < nu
+    # shadowed[j]: an older active entry (j' > j) touches the same column,
+    # so entry j's restore would be overwritten in the sequential replay.
+    same = tasks[None, :] == tasks[:, None]
+    older = j[None, :] > j[:, None]
+    shadowed = jnp.any(same & older & active[None, :], axis=1)
+    win = active & ~shadowed
+    cols = jnp.where(win, tasks, num_cols)           # num_cols => dropped
+    return v.at[:, cols].set(delta_ring[slots].T, mode="drop")
+
+
 def fixed_point_residual(problem: MTLProblem, v: Array, eta: float) -> Array:
     """||BF(v) - v||_F — zero exactly at a fixed point of the BF operator."""
     return jnp.linalg.norm(backward_forward(problem, v, eta) - v)

@@ -13,6 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.amtl_event import amtl_event as _amtl_event_pallas
+from repro.kernels.amtl_event_batch import \
+    amtl_event_batch as _amtl_event_batch_pallas
 from repro.kernels.km_update import km_update as _km_pallas
 from repro.kernels.l21_prox import l21_prox as _l21_pallas
 from repro.kernels.lstsq_grad import lstsq_grad as _lstsq_pallas
@@ -46,6 +48,26 @@ def amtl_event(v_t: Array, p_t: Array, g_t: Array, eta: Array, eta_k: Array,
         return _amtl_event_pallas(v_t, p_t, g_t, eta, eta_k,
                                   interpret=interpret)
     return ref.amtl_event_ref(v_t, p_t, g_t, eta, eta_k)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def amtl_event_batch(v: Array, p_cols: Array, g_cols: Array, tasks: Array,
+                     eta: Array, eta_ks: Array, *,
+                     use_pallas: bool | None = None,
+                     interpret: bool = False) -> tuple[Array, Array]:
+    """Batched multi-event update: returns (v_new, undo_cols (B, d)).
+
+    Within-batch duplicate tasks serialize in event order (see
+    `ref.amtl_event_batch_ref`).  On CPU the oracle path is also the batch
+    engine's hot path — its per-event arithmetic is the serial engines'
+    expression, which is what the bitwise equivalence tests rely on.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _amtl_event_batch_pallas(v, p_cols, g_cols, tasks, eta,
+                                        eta_ks, interpret=interpret)
+    return ref.amtl_event_batch_ref(v, p_cols, g_cols, tasks, eta, eta_ks)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))

@@ -30,6 +30,70 @@ def amtl_event_ref(v_t: Array, p_t: Array, g_t: Array, eta: Array,
     return km_update_ref(v_t, p_t, g_t, eta, eta_k), v_t
 
 
+def last_occurrence_mask(tasks: Array) -> Array:
+    """(B,) bool: event i is the LAST in-batch occurrence of its task.
+
+    The within-batch conflict-resolution predicate shared by the oracle and
+    the Pallas kernel's host wrapper: only last occurrences scatter back,
+    so duplicate tasks write conflict-free.
+    """
+    idx = jnp.arange(tasks.shape[0])
+    later_dup = (tasks[None, :] == tasks[:, None]) & (idx[None, :] > idx[:, None])
+    return ~jnp.any(later_dup, axis=1)
+
+
+def amtl_event_batch_ref(v: Array, p_cols: Array, g_cols: Array,
+                         tasks: Array, eta: Array,
+                         eta_ks: Array) -> tuple[Array, Array]:
+    """Batched fused column events, serialized in event order.
+
+    v: (d, T) iterate; tasks: (B,) activated task per event; p_cols/g_cols:
+    (d, B) per-event prox column and forward-step gradient; eta_ks: (B,)
+    per-event KM relaxation.  Returns (v_new (d, T), undo_cols (B, d)).
+
+    Within-batch conflict semantics: event i reads the column as left by
+    the most recent EARLIER event in the batch that wrote the same task
+    (duplicate tasks serialize), and its undo entry is that pre-write
+    column — iterating `amtl_event_ref` in event order over a shared v is
+    the specification.  The implementation gathers the B columns once,
+    serializes each duplicate chain through a predecessor pointer inside a
+    scan (O(d) per event instead of an O(d*T) scatter per event), and
+    scatters back once through the conflict-free last occurrence of each
+    task.  Every per-event expression is `amtl_event_ref` on the same bits
+    sequential replay would see, so the result — and the batch engine's
+    CPU-path iterates — stay bitwise-equal to serial replay.
+    """
+    b = tasks.shape[0]
+    num_cols = v.shape[1]
+    idx = jnp.arange(b)
+    same = tasks[None, :] == tasks[:, None]
+    # prev[i]: most recent earlier in-batch event on the same task (-1: none)
+    prev = jnp.max(jnp.where(same & (idx[None, :] < idx[:, None]),
+                             idx[None, :], -1), axis=1)
+    # last occurrence per task scatters back; earlier duplicates are
+    # shadowed, so the scatter indices are conflict-free (losers aim at
+    # column T, out of bounds, dropped).
+    scatter_to = jnp.where(last_occurrence_mask(tasks), tasks, num_cols)
+
+    cols0 = v[:, tasks]                                      # (d, b) gather
+
+    def one(outbuf, inp):
+        i, pr, p_t, g_t, eta_k = inp
+        mine = jax.lax.dynamic_slice_in_dim(cols0, i, 1, axis=1)
+        inherited = jax.lax.dynamic_slice_in_dim(
+            outbuf, jnp.maximum(pr, 0), 1, axis=1)
+        cur = jnp.where(pr >= 0, inherited, mine)[:, 0]
+        v_t_new, old = amtl_event_ref(cur, p_t, g_t, eta, eta_k)
+        outbuf = jax.lax.dynamic_update_slice_in_dim(
+            outbuf, v_t_new[:, None], i, axis=1)
+        return outbuf, old
+
+    outs, undos = jax.lax.scan(
+        one, jnp.zeros_like(cols0),
+        (idx, prev, p_cols.T, g_cols.T, eta_ks))
+    return v.at[:, scatter_to].set(outs, mode="drop"), undos
+
+
 def l21_prox_ref(w: Array, t: Array) -> Array:
     """Row-group soft threshold: w^i * max(0, 1 - t/||w^i||)."""
     w32 = w.astype(jnp.float32)

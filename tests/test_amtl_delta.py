@@ -86,6 +86,62 @@ def test_prox_every_objective_decreases(small_problem):
     assert objs[-1] < objs[0]
     assert objs[-1] < objs[len(objs) // 2] + 1e-3  # keeps improving late
 
+def _amortized_oracle_numpy(problem, cfg, key, num_events):
+    """Sequential pure-numpy replay of the amortized algorithm (§III-C).
+
+    Event k: sample (t, nu) with the engine's exact PRNG calls; if
+    k % prox_every == 0 recompute the server prox on the stale read
+    (iterate from nu events ago, own column patched current) and cache it,
+    else reuse the cache; then apply the KM-relaxed forward step to column
+    t.  Float64 numpy arithmetic — the test checks the engine produces THE
+    amortized iterates, not merely a decreasing objective.
+    """
+    xs = np.asarray(problem.xs, np.float64)
+    ys = np.asarray(problem.ys, np.float64)
+    T = xs.shape[0]
+    v = np.zeros((problem.dim, T))
+    history = [v.copy()]
+    p_cache = None
+    for k in range(num_events):
+        key, k_task, k_delay = jax.random.split(key, 3)
+        t = int(jax.random.randint(k_task, (), 0, T))
+        raw = cfg.delay_jitter * float(jax.random.uniform(k_delay))
+        nu = min(int(np.round(raw)), min(cfg.tau, k))
+        if k % cfg.prox_every == 0:
+            v_hat = history[len(history) - 1 - nu].copy()
+            v_hat[:, t] = v[:, t]
+            u, s, vt = np.linalg.svd(v_hat, full_matrices=False)
+            s = np.maximum(s - cfg.eta * problem.lam, 0.0)
+            p_cache = (u * s[None, :]) @ vt
+        p_t = p_cache[:, t]
+        g_t = 2.0 * (xs[t].T @ (xs[t] @ p_t - ys[t]))
+        v = v.copy()
+        v[:, t] = v[:, t] + cfg.eta_k * (p_t - cfg.eta * g_t - v[:, t])
+        history.append(v.copy())
+    return v
+
+
+@pytest.mark.parametrize("prox_every", [2, 4])
+def test_prox_every_matches_sequential_oracle(small_problem, prox_every):
+    """The amortized engine's iterates are the ones §III-C specifies: a
+    refresh exactly at events 0, K, 2K, ... on the then-current stale read,
+    the cached prox in between — verified column-for-column against an
+    event-by-event numpy replay, not just by objective decrease."""
+    cfg = _base_cfg(small_problem, tau=3, prox_every=prox_every)
+    key = jax.random.PRNGKey(17)
+    w0 = jnp.zeros((small_problem.dim, small_problem.num_tasks), jnp.float32)
+    num_events = 24
+    got = amtl_events_only(small_problem, cfg, w0, key, num_events)
+    want = _amortized_oracle_numpy(small_problem, cfg, key, num_events)
+    np.testing.assert_allclose(np.asarray(current_iterate(got), np.float64),
+                               want, rtol=5e-4, atol=5e-5)
+    # the caching matters: an exact-prox (prox_every=1) run must NOT match
+    exact = amtl_events_only(small_problem, cfg._replace(prox_every=1),
+                             w0, key, num_events)
+    assert not np.allclose(np.asarray(current_iterate(exact), np.float64),
+                           want, rtol=5e-4, atol=5e-5)
+
+
 def test_randomized_prox_refresh_converges(small_problem):
     """Randomized SVT refresh (large-d*T mode) reaches a comparable
     objective to the exact-prox run."""

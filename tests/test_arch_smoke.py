@@ -31,9 +31,9 @@ def smoke_cache():
     return {}
 
 
-def _setup(name):
+def _setup(name, spec=SMOKE):
     cfg = get_config(name).reduced()
-    batch = concrete_batch(cfg, SMOKE, jax.random.PRNGKey(1))
+    batch = concrete_batch(cfg, spec, jax.random.PRNGKey(1))
     return cfg, batch
 
 
@@ -70,31 +70,43 @@ def test_train_step_no_nans(name):
     assert bool(jnp.all(jnp.isfinite(leaf0)))
 
 
+S32 = 32
+SMOKE32 = ShapeSpec("smoke32", "train", S32, B)
+
+
+@pytest.mark.parametrize("spec,s", [
+    pytest.param(SMOKE, S, id="s16"),
+    # S=32 keeps decode/forward equivalence covered PAST position 16 —
+    # rope/rotary phase, sliding-window, and cache-indexing bugs that only
+    # show beyond the first 16 positions land here (coverage the fast
+    # smokes dropped when they shrank to S=16).
+    pytest.param(SMOKE32, S32, marks=pytest.mark.slow, id="s32"),
+])
 @pytest.mark.parametrize("name", _arch_params(
     [n for n in ARCH_NAMES if get_config(n).has_decode]))
-def test_decode_matches_forward_last_position(name):
-    """Prefill + decode_step at position S must equal the full forward's
+def test_decode_matches_forward_last_position(name, spec, s):
+    """Prefill + decode_step at position s must equal the full forward's
     next-position logits — catches every cache/mask/rope bug."""
-    cfg, batch = _setup(name)
+    cfg, batch = _setup(name, spec)
     params = init_params(jax.random.PRNGKey(0), cfg)
     tokens = batch["tokens"]
 
-    # full forward over S+1 tokens
+    # full forward over s+1 tokens
     nxt = jnp.full((B, 1), 7, jnp.int32)
     full = jnp.concatenate([tokens, nxt], axis=1)
     fb = dict(batch)
     fb["tokens"] = full
     fb["targets"] = jnp.roll(full, -1, axis=1)
-    logits_p, cache = prefill(params, batch, cfg, s_max=S + 8, remat=False)
-    logits_d, _ = decode_step(params, cache, nxt, jnp.asarray(S, jnp.int32),
+    logits_p, cache = prefill(params, batch, cfg, s_max=s + 8, remat=False)
+    logits_d, _ = decode_step(params, cache, nxt, jnp.asarray(s, jnp.int32),
                               cfg)
-    # reference: prefill over the S+1 prompt gives last-position logits
-    logits_ref, _ = prefill(params, fb, cfg, s_max=S + 8, remat=False)
+    # reference: prefill over the s+1 prompt gives last-position logits
+    logits_ref, _ = prefill(params, fb, cfg, s_max=s + 8, remat=False)
     got = np.asarray(logits_d[:, 0], np.float32)
     want = np.asarray(logits_ref[:, 0], np.float32)
     atol = 2e-2 if cfg.moe is None else 1.5e-1   # top-k ties can flip experts
     np.testing.assert_allclose(got, want, rtol=5e-2, atol=atol,
-                               err_msg=f"{name} decode != forward")
+                               err_msg=f"{name} decode != forward at S={s}")
 
 
 @pytest.mark.parametrize("name", _arch_params(["gemma2-2b", "rwkv6-3b",
