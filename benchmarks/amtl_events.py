@@ -18,9 +18,16 @@ Because the batch engine's prox cadence is EVENT_BATCH (not PROX_EVERY), a
 `delta_matched` row runs the delta engine at prox_every=EVENT_BATCH too:
 `batch_over_delta_matched` isolates the batching machinery's gain from the
 cheaper prox schedule, while `batch_over_delta` is the end-to-end win over
-the recorded delta production config.  Engine equivalence (bitwise,
-aligned configs) is covered by tests/test_amtl_delta.py and
-tests/test_amtl_batch.py, not timed here.
+the recorded delta production config.  The `sharded` row runs the batch
+configuration with the T task columns partitioned over ALL visible devices
+(`config.task_shards`; CI forces 8 fake host devices) — one all_gather +
+replicated prox per batch, shard-local column updates.  On fake host
+devices the replicated prox multiplies total CPU work, so
+`speedup.sharded_over_batch` measures collective/masking overhead there,
+not real multi-chip scaling; the row exists to track that overhead across
+PRs.  Engine equivalence (bitwise, aligned configs) is covered by
+tests/test_amtl_delta.py, tests/test_amtl_batch.py, and
+tests/test_amtl_sharded.py, not timed here.
 """
 from __future__ import annotations
 
@@ -56,11 +63,11 @@ def _problem() -> MTLProblem:
 
 
 def _events_per_sec(problem: MTLProblem, cfg: AMTLConfig, events: int,
-                    reps: int = 3) -> float:
+                    reps: int = 3, mesh=None) -> float:
     v0 = jnp.zeros((D, T), jnp.float32)
     key = jax.random.PRNGKey(7)
     run = lambda: jax.block_until_ready(
-        amtl_events_only(problem, cfg, v0, key, events))
+        amtl_events_only(problem, cfg, v0, key, events, mesh=mesh))
     run()                                   # compile + warm-up
     best = float("inf")                     # best-of-k: stable under noise
     for _ in range(reps):
@@ -70,13 +77,17 @@ def _events_per_sec(problem: MTLProblem, cfg: AMTLConfig, events: int,
     return events / best
 
 
-def _state_bytes(cfg: AMTLConfig) -> dict:
+def _state_bytes(cfg: AMTLConfig, task_shards: int = 1) -> dict:
     itemsize = 4  # f32
     if cfg.engine == "dense":
         ring = (cfg.tau + 1) * D * T * itemsize
         total = ring  # the ring holds every iterate incl. the newest
     else:
-        ring = (cfg.tau + 1) * D * itemsize + (cfg.tau + 1) * 4
+        # engine="sharded" keeps one private (tau+1, d) undo ring per
+        # shard; aggregate bytes scale with the shard count while the
+        # per-device footprint stays the batch engine's.
+        ring = (task_shards * (cfg.tau + 1) * D * itemsize
+                + (cfg.tau + 1) * 4)
         total = ring + D * T * itemsize                # + v
         if cfg.engine == "delta" and cfg.prox_every > 1:
             total += D * T * itemsize                  # + live p_cache
@@ -97,26 +108,39 @@ def run() -> list[Row]:
                            prox_every=EVENT_BATCH, event_batch=EVENT_BATCH,
                            prox_rank=PROX_RANK)
 
+    # task-sharded engine: batch config over all visible devices (T=128 is
+    # divisible by any power-of-two host-device count CI uses)
+    task_shards = jax.local_device_count()
+    from repro.launch.mesh import make_task_mesh
+    mesh = make_task_mesh(task_shards)
+    sharded_cfg = AMTLConfig(eta=0.05, eta_k=eta_k, tau=TAU,
+                             engine="sharded", prox_every=EVENT_BATCH,
+                             event_batch=EVENT_BATCH, prox_rank=PROX_RANK)
+
     dense_eps = _events_per_sec(problem, dense_cfg, DENSE_EVENTS)
     delta_eps = _events_per_sec(problem, delta_cfg, DELTA_EVENTS)
     matched_eps = _events_per_sec(problem, delta_matched_cfg, BATCH_EVENTS)
     batch_eps = _events_per_sec(problem, batch_cfg, BATCH_EVENTS)
+    sharded_eps = _events_per_sec(problem, sharded_cfg, BATCH_EVENTS,
+                                  mesh=mesh)
     dense_mem = _state_bytes(dense_cfg)
     delta_mem = _state_bytes(delta_cfg)
     batch_mem = _state_bytes(batch_cfg)
+    sharded_mem = _state_bytes(sharded_cfg, task_shards)
     speedup = {
         "delta_over_dense": delta_eps / max(dense_eps, 1e-12),
         "batch_over_dense": batch_eps / max(dense_eps, 1e-12),
         "batch_over_delta": batch_eps / max(delta_eps, 1e-12),
         "batch_over_delta_matched": batch_eps / max(matched_eps, 1e-12),
+        "sharded_over_batch": sharded_eps / max(batch_eps, 1e-12),
     }
 
     report = {
-        # prox_every is the delta row's cadence; the batch and
-        # delta_matched rows run at prox cadence event_batch.
+        # prox_every is the delta row's cadence; the batch, delta_matched,
+        # and sharded rows run at prox cadence event_batch.
         "config": {"d": D, "T": T, "tau": TAU, "n_samples": N_SAMPLES,
                    "prox_every": PROX_EVERY, "prox_rank": PROX_RANK,
-                   "event_batch": EVENT_BATCH,
+                   "event_batch": EVENT_BATCH, "task_shards": task_shards,
                    "backend": jax.default_backend()},
         "dense": {"events_per_sec": dense_eps,
                   "us_per_event": 1e6 / dense_eps, **dense_mem},
@@ -126,6 +150,8 @@ def run() -> list[Row]:
                           "us_per_event": 1e6 / matched_eps, **delta_mem},
         "batch": {"events_per_sec": batch_eps,
                   "us_per_event": 1e6 / batch_eps, **batch_mem},
+        "sharded": {"events_per_sec": sharded_eps,
+                    "us_per_event": 1e6 / sharded_eps, **sharded_mem},
         "speedup": speedup,
         # kept for cross-PR continuity with the PR-1 schema
         "speedup_events_per_sec": speedup["delta_over_dense"],
@@ -147,6 +173,9 @@ def run() -> list[Row]:
             f"vs_delta={speedup['batch_over_delta']:.2f}x "
             f"vs_delta_matched={speedup['batch_over_delta_matched']:.2f}x "
             f"vs_dense={speedup['batch_over_dense']:.2f}x"),
+        Row("amtl_events/sharded", 1e6 / sharded_eps,
+            f"events/sec={sharded_eps:.2f} shards={task_shards} "
+            f"vs_batch={speedup['sharded_over_batch']:.2f}x"),
         Row("amtl_events/ring_memory", 0.0,
             f"dense={dense_mem['ring_bytes']}B delta={delta_mem['ring_bytes']}B "
             f"ratio={report['ring_memory_ratio']:.0f}x"),

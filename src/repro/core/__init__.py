@@ -6,7 +6,8 @@ from repro.core.losses import MTLProblem, get_loss
 from repro.core.operators import (amtl_max_step, backward, backward_forward,
                                   fixed_point_residual, forward,
                                   forward_backward, km_block_update, km_step,
-                                  rollback_columns, rollback_columns_batch)
+                                  rollback_columns, rollback_columns_batch,
+                                  rollback_columns_shard)
 from repro.core.prox import apply_prox, get_regularizer
 from repro.core.simulator import (NetworkModel, SimProblem, SimResult,
                                   make_synthetic, simulate_amtl,
@@ -16,7 +17,7 @@ from repro.core.smtl import fista_solve, reference_optimum, smtl_solve
 __all__ = [
     "AMTLConfig", "AMTLResult", "amtl_events_only", "amtl_solve",
     "current_iterate", "default_config", "rollback_columns",
-    "rollback_columns_batch",
+    "rollback_columns_batch", "rollback_columns_shard",
     "DelayHistory", "dynamic_multiplier", "MTLProblem", "get_loss",
     "amtl_max_step", "backward", "backward_forward", "fixed_point_residual",
     "forward", "forward_backward", "km_block_update", "km_step",

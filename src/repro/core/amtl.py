@@ -13,7 +13,7 @@ simulation* inside `lax.scan`/`fori_loop`:
             (Eq. III.4), optionally scaled by the delay-adaptive multiplier
             (Eq. III.5/III.6).
 
-Three engines implement the same mathematics:
+Four engines implement the same mathematics:
 
   engine="delta" (default) — the delta ring.  Only ONE full iterate V is kept;
       each event appends `(task_id, pre-write column)` to a `(tau+1, d)` undo
@@ -51,6 +51,24 @@ Three engines implement the same mathematics:
       (`prox_every == event_batch`, same key) the batch engine reproduces
       the delta engine's iterates bitwise on the CPU oracle path.
 
+  engine="sharded" — the batch engine with the T task columns partitioned
+      over a 1-D "tasks" mesh axis (shard_map).  Each shard owns a (d,
+      T/n_shards) block of V, a private (tau+1, d) undo ring, and its
+      tasks' data; the task ring records GLOBAL task ids and the scalar
+      chain state (PRNG key, ring pointer, event counter) is replicated.
+      Every shard replays the FULL serial PRNG chain and masks events to
+      their owner, so the (task, staleness) event stream is invariant to
+      shard count by construction.  Collectives are paid only at prox
+      cadence — one `all_gather` per batch assembles the stale iterate for
+      the server prox (SVT / randomized SVT), whose replicated result is
+      the broadcast back; gradients, column updates, and ring writes stay
+      shard-local.  This is exactly the paper's server/worker communication
+      pattern: task nodes hold their data locally, the central server runs
+      the prox.  On a 1-device mesh the engine reproduces engine="batch"
+      bitwise on the CPU oracle path, and per-shard `delay_offsets` skews
+      model the paper's slow-node regime (a lagging shard's tasks read at
+      high staleness without stalling the other shards' event stream).
+
 This is bit-faithful to Algorithm 1's mathematics while being jit-compiled,
 deterministic under a PRNG key, and mesh-shardable.  Wall-clock behaviour
 (Tables I/III) is studied separately by `repro.core.simulator`.
@@ -66,8 +84,11 @@ import jax.numpy as jnp
 from repro.core.dynamic_step import DelayHistory, dynamic_multiplier
 from repro.core.losses import MTLProblem
 from repro.core.operators import (amtl_max_step, backward, km_block_update,
-                                  rollback_columns, rollback_columns_batch)
+                                  rollback_columns, rollback_columns_batch,
+                                  rollback_columns_shard)
 from repro.core.prox import svt_randomized
+from repro.distributed.sharding import (TASK_AXIS, shard_map_compat,
+                                        task_shard_specs)
 
 Array = jax.Array
 
@@ -85,6 +106,8 @@ class AMTLConfig(NamedTuple):
     # "dense": the seed (tau+1, d, T) full-iterate ring, for equivalence.
     # "batch": the delta ring, event_batch events per loop step with one
     #          server prox per batch and conflict-aware batched updates.
+    # "sharded": the batch engine with task columns partitioned over a
+    #          "tasks" mesh axis; one all_gather per batch at prox cadence.
     engine: str = "delta"
     # Server prox amortization (paper §III-C): refresh the backward step
     # every K events, reuse the cached prox in between.  K=1 == exact AMTL.
@@ -135,6 +158,24 @@ class BatchAMTLState(NamedTuple):
     key: Array
 
 
+class ShardedAMTLState(NamedTuple):
+    """Sharded-engine state, global view (engine='sharded').
+
+    The T task columns live on a 1-D "tasks" mesh axis.  Each shard runs
+    the batch engine's conflict-aware column updates on its own block and
+    keeps a private undo ring; the task ring holds GLOBAL task ids and —
+    like the scalar chain state — is replicated, because every shard
+    replays the full serial PRNG chain and masks events to their owner.
+    """
+    v: Array               # (d, T) iterate, columns sharded over "tasks"
+    delta_ring: Array      # (n_shards, tau+1, d) per-shard undo rings
+    task_ring: Array       # (tau+1,) int32 GLOBAL task id per event slot
+    ptr: Array             # int32 slot of the newest event (replicated)
+    event: Array           # int32 global event counter (replicated)
+    history: DelayHistory  # per-task delays, rows sharded over "tasks"
+    key: Array             # PRNG (replicated serial chain)
+
+
 class AMTLResult(NamedTuple):
     v: Array               # final auxiliary iterate V (d, T)
     w: Array               # final primal W = prox(V) (one extra backward)
@@ -179,6 +220,20 @@ def init_batch_state(cfg: AMTLConfig, v0: Array, num_tasks: int,
     return BatchAMTLState(
         v=v0,
         delta_ring=jnp.zeros((depth, v0.shape[0]), v0.dtype),
+        task_ring=jnp.zeros((depth,), jnp.int32),
+        ptr=jnp.zeros((), jnp.int32),
+        event=jnp.zeros((), jnp.int32),
+        history=DelayHistory.create(num_tasks, cfg.delay_window),
+        key=key,
+    )
+
+
+def init_sharded_state(cfg: AMTLConfig, v0: Array, num_tasks: int,
+                       key: Array, n_shards: int) -> ShardedAMTLState:
+    depth = cfg.tau + 1
+    return ShardedAMTLState(
+        v=v0,
+        delta_ring=jnp.zeros((n_shards, depth, v0.shape[0]), v0.dtype),
         task_ring=jnp.zeros((depth,), jnp.int32),
         ptr=jnp.zeros((), jnp.int32),
         event=jnp.zeros((), jnp.int32),
@@ -408,7 +463,136 @@ def _one_batch(problem: MTLProblem, cfg: AMTLConfig, delay_offsets: Array,
     )
 
 
-def _engine(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array):
+def _sharded_state_specs(axis: str = TASK_AXIS) -> ShardedAMTLState:
+    """PartitionSpec tree mirroring ShardedAMTLState's placement classes."""
+    sp = task_shard_specs(axis)
+    return ShardedAMTLState(
+        v=sp["columns"],
+        delta_ring=sp["per_shard"],
+        task_ring=sp["replicated"],
+        ptr=sp["replicated"],
+        event=sp["replicated"],
+        history=DelayHistory(buf=sp["per_task"], count=sp["per_task"]),
+        key=sp["replicated"],
+    )
+
+
+def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
+                       delay_offsets: Array, state: ShardedAMTLState, *,
+                       mesh) -> ShardedAMTLState:
+    """`event_batch` activations with task columns sharded over "tasks".
+
+    Communication schedule — the paper's server/worker pattern, collectives
+    only at prox cadence: each shard reconstructs the stale bits of ITS
+    columns from its private undo ring, ONE `all_gather` per batch
+    assembles the (d, T) stale iterate, every shard runs the same server
+    prox on it (the replicated result is the broadcast back), and
+    gradients, column updates, and ring writes stay shard-local.
+
+    Every shard replays the full serial PRNG chain and masks events to
+    their owner (sentinel column ids drop foreign events inside the batch
+    op), so per-shard execution is a masked replay of `_one_batch`: on a
+    1-device mesh every expression below degenerates to the batch engine's
+    and the iterates match bitwise on the CPU oracle path; at any shard
+    count the event stream and the per-column arithmetic are unchanged.
+    """
+    from repro.kernels.ops import amtl_event_batch_sharded
+    from repro.kernels.ref import shard_local_tasks
+
+    axis = TASK_AXIS
+    n_shards = mesh.shape[axis]
+    num_tasks = problem.num_tasks
+    n_local = num_tasks // n_shards
+    depth = cfg.tau + 1
+    bsz = cfg.event_batch
+    use_randomized = cfg.prox_rank is not None and problem.reg_name == "nuclear"
+
+    def local_step(xs, ys, offs, st):
+        problem_l = MTLProblem(xs, ys, problem.loss_name, problem.reg_name,
+                               problem.lam)
+        t_off = jax.lax.axis_index(axis) * n_local
+        # Folded off the batch-start key, replicated — identical to the
+        # serial engines' sketch key.
+        k_prox = jax.random.fold_in(st.key, 7) if use_randomized else None
+        key, ts, nus = _sample_activation_batch(cfg, offs, st.key,
+                                                num_tasks, st.event, bsz)
+        v = st.v                                   # (d, n_local)
+        ring = st.delta_ring[0]                    # (depth, d) private ring
+
+        # Shard-local stale reconstruction at the batch's first event, then
+        # patch that event's column current on its owner shard.
+        v_hat_loc = rollback_columns_shard(v, ring, st.task_ring, st.ptr,
+                                           nus[0], cfg.tau, t_off)
+        c0 = jnp.clip(ts[0] - t_off, 0, n_local - 1)
+        own0 = (ts[0] >= t_off) & (ts[0] < t_off + n_local)
+        v_hat_loc = v_hat_loc.at[:, c0].set(
+            jnp.where(own0, v[:, c0], v_hat_loc[:, c0]))
+
+        # The batch's ONE collective: assemble the global stale iterate for
+        # the server prox; the prox result is replicated (= broadcast).
+        v_hat = jax.lax.all_gather(v_hat_loc, axis, axis=1, tiled=True)
+        if use_randomized:
+            p = svt_randomized(v_hat, jnp.asarray(cfg.eta * problem.lam,
+                                                  v_hat.dtype),
+                               rank=cfg.prox_rank, key=k_prox)
+        else:
+            p = backward(problem_l, v_hat, cfg.eta)
+
+        p_cols = p[:, ts]                                    # (d, bsz)
+        lts, owned = shard_local_tasks(ts, t_off, n_local)
+        lts_clamped = jnp.where(owned, lts, 0)
+
+        # Forward-step gradients from the shard-local task data.  Foreign
+        # events run on clamped inputs and are dropped at the scatter; the
+        # owner's expression is the serial engines', on the same bits.
+        def grad_one(_, inp):
+            t_l, p_t = inp
+            return None, problem_l.task_grad(t_l, p_t)
+
+        _, g_rows = jax.lax.scan(grad_one, None, (lts_clamped, p_cols.T))
+
+        # Delay recording / KM relaxation in event order; only the owner
+        # keeps each event's history write.
+        def relax_one(h, inp):
+            t_l, nu, own = inp
+            h2, eta_k = _km_relaxation(cfg, h, t_l, nu)
+            h = jax.tree.map(lambda a, b: jnp.where(own, a, b), h2, h)
+            return h, eta_k
+
+        history, eta_ks = jax.lax.scan(relax_one, st.history,
+                                       (lts_clamped, nus, owned))
+
+        # Shard-local batched column updates (foreign events -> sentinel
+        # column, dropped inside the op) and private-ring append; the task
+        # ring records global ids so later rollbacks can re-mask ownership.
+        v_new, undo_cols = amtl_event_batch_sharded(
+            v, p_cols, g_rows.T, lts, jnp.asarray(cfg.eta, v.dtype),
+            eta_ks.astype(v.dtype))
+
+        keep = min(bsz, depth)
+        slots = (st.ptr + 1 + jnp.arange(bsz - keep, bsz)) % depth
+        return ShardedAMTLState(
+            v=v_new,
+            delta_ring=ring.at[slots].set(undo_cols[bsz - keep:])[None],
+            task_ring=st.task_ring.at[slots].set(ts[bsz - keep:]),
+            ptr=(st.ptr + bsz) % depth,
+            event=st.event + bsz,
+            history=history,
+            key=key,
+        )
+
+    sp = task_shard_specs(axis)
+    state_specs = _sharded_state_specs(axis)
+    step = shard_map_compat(
+        local_step, mesh=mesh,
+        in_specs=(sp["per_task"], sp["per_task"], sp["replicated"],
+                  state_specs),
+        out_specs=state_specs)
+    return step(problem.xs, problem.ys, delay_offsets, state)
+
+
+def _engine(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array,
+            mesh=None):
     """(initial state, step fn, events per step) for cfg.
 
     Read V off the returned state via `current_iterate`.
@@ -421,7 +605,12 @@ def _engine(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array):
     if cfg.engine in ("dense", "delta") and cfg.event_batch != 1:
         raise ValueError(
             f"engine={cfg.engine!r} processes one event per step; "
-            f"event_batch={cfg.event_batch} requires engine='batch'")
+            f"event_batch={cfg.event_batch} requires engine='batch' or "
+            "engine='sharded'")
+    if mesh is not None and cfg.engine != "sharded":
+        raise ValueError(
+            f"mesh is only meaningful for engine='sharded' "
+            f"(got engine={cfg.engine!r})")
     if cfg.prox_rank is not None and problem.reg_name != "nuclear":
         raise ValueError(
             "prox_rank selects the randomized SVT refresh, which only "
@@ -430,34 +619,55 @@ def _engine(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array):
         if cfg.prox_every != 1 or cfg.prox_rank is not None:
             raise ValueError("engine='dense' is the exact seed baseline; "
                              "prox_every>1 / prox_rank require "
-                             "engine='delta' or engine='batch'")
+                             "engine='delta', 'batch', or 'sharded'")
         return (init_state(cfg, v0, problem.num_tasks, key),
                 _one_event_dense, 1)
     if cfg.engine == "delta":
         return (init_delta_state(cfg, v0, problem.num_tasks, key),
                 _one_event_delta, 1)
-    if cfg.engine == "batch":
+    if cfg.engine in ("batch", "sharded"):
         if cfg.prox_every != cfg.event_batch:
             raise ValueError(
-                "engine='batch' refreshes the server prox once per batch, "
-                f"so prox_every ({cfg.prox_every}) must equal event_batch "
-                f"({cfg.event_batch})")
-        return (init_batch_state(cfg, v0, problem.num_tasks, key),
-                _one_batch, cfg.event_batch)
+                f"engine={cfg.engine!r} refreshes the server prox once per "
+                f"batch, so prox_every ({cfg.prox_every}) must equal "
+                f"event_batch ({cfg.event_batch})")
+        if cfg.engine == "batch":
+            return (init_batch_state(cfg, v0, problem.num_tasks, key),
+                    _one_batch, cfg.event_batch)
+        if mesh is None:
+            from repro.launch.mesh import make_task_mesh
+            mesh = make_task_mesh()
+        if TASK_AXIS not in mesh.axis_names:
+            raise ValueError(
+                f"engine='sharded' needs a mesh with a {TASK_AXIS!r} axis; "
+                f"got axes {mesh.axis_names}")
+        n_shards = mesh.shape[TASK_AXIS]
+        if problem.num_tasks % n_shards != 0:
+            raise ValueError(
+                f"num_tasks ({problem.num_tasks}) must be divisible by the "
+                f"{TASK_AXIS!r} mesh axis size ({n_shards})")
+        return (init_sharded_state(cfg, v0, problem.num_tasks, key,
+                                   n_shards),
+                functools.partial(_one_batch_sharded, mesh=mesh),
+                cfg.event_batch)
     raise ValueError(f"unknown AMTL engine {cfg.engine!r}; "
-                     "expected 'delta', 'dense', or 'batch'")
+                     "expected 'delta', 'dense', 'batch', or 'sharded'")
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "num_epochs", "events_per_epoch"))
+                   static_argnames=("cfg", "num_epochs", "events_per_epoch",
+                                    "mesh"))
 def amtl_solve(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array,
                num_epochs: int, events_per_epoch: int | None = None,
-               delay_offsets: Array | None = None) -> AMTLResult:
+               delay_offsets: Array | None = None, mesh=None) -> AMTLResult:
     """Run AMTL for num_epochs * events_per_epoch activations.
 
     One "epoch" defaults to T events (each node activated once in
     expectation), matching the paper's per-iteration accounting ("every task
     node updates one forward step for each iteration").
+
+    `mesh` (engine='sharded' only) is the 1-D "tasks" mesh to partition the
+    task columns over; default is all visible devices (`make_task_mesh`).
     """
     num_tasks = problem.num_tasks
     if events_per_epoch is None:
@@ -465,7 +675,7 @@ def amtl_solve(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array,
     if delay_offsets is None:
         delay_offsets = jnp.zeros((num_tasks,), jnp.float32)
 
-    state0, step, per_step = _engine(problem, cfg, v0, key)
+    state0, step, per_step = _engine(problem, cfg, v0, key, mesh)
     if events_per_epoch % per_step != 0:
         raise ValueError(
             f"events_per_epoch ({events_per_epoch}) must be a multiple of "
@@ -488,20 +698,20 @@ def amtl_solve(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array,
     return AMTLResult(v, w, objs, ress)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "num_events"))
+@functools.partial(jax.jit, static_argnames=("cfg", "num_events", "mesh"))
 def amtl_events_only(problem: MTLProblem, cfg: AMTLConfig, v0: Array,
                      key: Array, num_events: int,
-                     delay_offsets: Array | None = None):
+                     delay_offsets: Array | None = None, mesh=None):
     """Run `num_events` activations with NO per-epoch metric tail.
 
-    Returns the final engine state (AMTLState, DeltaAMTLState, or
-    BatchAMTLState, matching `cfg.engine`).  This is
+    Returns the final engine state (AMTLState, DeltaAMTLState,
+    BatchAMTLState, or ShardedAMTLState, matching `cfg.engine`).  This is
     the events/sec benchmark path: it isolates the per-event engine cost
     from the (full-SVD) objective/residual instrumentation of `amtl_solve`.
     """
     if delay_offsets is None:
         delay_offsets = jnp.zeros((problem.num_tasks,), jnp.float32)
-    state0, step, per_step = _engine(problem, cfg, v0, key)
+    state0, step, per_step = _engine(problem, cfg, v0, key, mesh)
     if num_events % per_step != 0:
         raise ValueError(
             f"num_events ({num_events}) must be a multiple of event_batch "
@@ -513,7 +723,7 @@ def amtl_events_only(problem: MTLProblem, cfg: AMTLConfig, v0: Array,
 
 def current_iterate(state) -> Array:
     """The newest iterate V held by any engine's state."""
-    if isinstance(state, (DeltaAMTLState, BatchAMTLState)):
+    if isinstance(state, (DeltaAMTLState, BatchAMTLState, ShardedAMTLState)):
         return state.v
     return state.ring[state.ptr]
 

@@ -113,23 +113,46 @@ def rollback_columns_batch(v: Array, delta_ring: Array, task_ring: Array,
     The batch engine uses this at its per-batch prox refresh, where the
     fori_loop's tau sequential (d,)-column writes would serialize for no
     reason; `rollback_columns` stays as the one-event engines' path and the
-    semantic reference.
+    semantic reference.  The winner selection lives in
+    `rollback_columns_shard`; this is the t_offset=0 case, where every
+    task is owned.
+    """
+    return rollback_columns_shard(v, delta_ring, task_ring, ptr, nu, tau,
+                                  jnp.zeros((), jnp.int32))
+
+
+def rollback_columns_shard(v: Array, delta_ring: Array, task_ring: Array,
+                           ptr: Array, nu: Array, tau: int,
+                           t_offset: Array) -> Array:
+    """Shard-local rollback: `task_ring` holds GLOBAL task ids, `v` is the
+    shard's (d, T_local) column block covering global columns
+    [t_offset, t_offset + T_local).
+
+    Same winner selection as the sequential replay — the oldest active
+    entry per column wins — but entries whose task lives on another shard
+    are dropped alongside the masked-out slots (their restore happens on
+    the owner, which holds the stored pre-write bits).  Concatenating the
+    per-shard results in shard order is therefore bitwise-equal to the
+    global `rollback_columns_batch` — which is this function at
+    t_offset=0, every task owned.
     """
     if tau == 0:
         return v
     depth = tau + 1
-    num_cols = v.shape[1]
+    n_local = v.shape[1]
     j = jnp.arange(tau)                              # j=0 -> newest event
     slots = (ptr - j) % depth
-    tasks = task_ring[slots]                         # (tau,)
+    tasks = task_ring[slots]                         # (tau,) global ids
     active = j < nu
     # shadowed[j]: an older active entry (j' > j) touches the same column,
     # so entry j's restore would be overwritten in the sequential replay.
     same = tasks[None, :] == tasks[:, None]
     older = j[None, :] > j[:, None]
     shadowed = jnp.any(same & older & active[None, :], axis=1)
-    win = active & ~shadowed
-    cols = jnp.where(win, tasks, num_cols)           # num_cols => dropped
+    local = tasks - t_offset
+    owned = (local >= 0) & (local < n_local)
+    win = active & ~shadowed & owned
+    cols = jnp.where(win, local, n_local)            # n_local => dropped
     return v.at[:, cols].set(delta_ring[slots].T, mode="drop")
 
 

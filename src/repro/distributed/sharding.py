@@ -48,6 +48,33 @@ def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):
     return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
               **{kw: check_vma})
 
+# ------------------------------------------------------- AMTL task axis ---
+
+TASK_AXIS = "tasks"
+
+
+def task_shard_specs(axis: str = TASK_AXIS) -> dict[str, P]:
+    """PartitionSpecs for the task-sharded AMTL engine (engine='sharded').
+
+    The engine partitions the T task columns of the (d, T) iterate over a
+    1-D `axis` mesh; everything it touches falls into four placement
+    classes (keys of the returned dict):
+
+      per_task   — leading-dim-T leaves: xs (T, n, d), ys (T, n), the
+                   delay-history rows (T, window)/(T,)
+      columns    — (d, T) iterates: tasks on the trailing dim
+      per_shard  — (n_shards, ...) leaves: each shard's private undo ring
+      replicated — the serial PRNG chain state (key, ptr, event counter)
+                   and the global-task-id ring every shard replays
+    """
+    return {
+        "per_task": P(axis),
+        "columns": P(None, axis),
+        "per_shard": P(axis),
+        "replicated": P(),
+    }
+
+
 # leaf-name -> raw spec (for the *unstacked* trailing dims)
 _COL = ("wq", "wk", "wv", "wg", "wr", "ck", "w_in", "w_gate", "shared_in",
         "shared_gate", "wq_a", "wq_b", "wkv_a", "wk_b", "wv_b", "in_proj",

@@ -71,6 +71,27 @@ def amtl_event_batch(v: Array, p_cols: Array, g_cols: Array, tasks: Array,
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def amtl_event_batch_sharded(v_local: Array, p_cols: Array, g_cols: Array,
+                             local_tasks: Array, eta: Array, eta_ks: Array,
+                             *, use_pallas: bool | None = None,
+                             interpret: bool = False) -> tuple[Array, Array]:
+    """Shard-local batched multi-event update (engine='sharded').
+
+    Same dispatch as `amtl_event_batch`, but `local_tasks` (from
+    `ref.shard_local_tasks`) may carry the sentinel id T_local ==
+    v_local.shape[1] for events owned by other shards.  Sentinel events are
+    computed on clamped inputs and dropped at the scatter, leaving
+    v_local's columns untouched; owned events issue bit-for-bit the
+    arithmetic the unsharded batch op would, which is what makes the
+    sharded engine's per-shard execution a masked replay of the global
+    batch rather than a reimplementation.
+    """
+    return amtl_event_batch(v_local, p_cols, g_cols, local_tasks, eta,
+                            eta_ks, use_pallas=use_pallas,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def l21_prox(w: Array, t: Array, *, use_pallas: bool | None = None,
              interpret: bool = False) -> Array:
     if use_pallas is None:

@@ -42,6 +42,26 @@ def last_occurrence_mask(tasks: Array) -> Array:
     return ~jnp.any(later_dup, axis=1)
 
 
+def shard_local_tasks(tasks: Array, t_offset: Array,
+                      n_local: int) -> tuple[Array, Array]:
+    """Map global task ids onto a shard's local column block.
+
+    Returns (local_tasks, owned).  Owned events get their local column id
+    in [0, n_local); events owned by other shards get the sentinel id
+    `n_local` — one past the shard's last column.  Both amtl_event_batch
+    paths treat the sentinel as a dropped event: the jnp oracle's gather
+    clamps and its scatter targets column n_local (out of bounds,
+    `mode="drop"`), and the Pallas kernel's one-hot either matches nothing
+    (n_local lane-aligned) or a padded column that is sliced away.
+    Sentinel events still flow through the per-event arithmetic, so
+    shard-local execution issues exactly the op sequence of the global
+    batch for the events it owns — the sharded engine's bitwise contract.
+    """
+    local = tasks.astype(jnp.int32) - t_offset
+    owned = (local >= 0) & (local < n_local)
+    return jnp.where(owned, local, n_local), owned
+
+
 def amtl_event_batch_ref(v: Array, p_cols: Array, g_cols: Array,
                          tasks: Array, eta: Array,
                          eta_ks: Array) -> tuple[Array, Array]:

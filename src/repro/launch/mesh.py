@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -14,6 +15,21 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_host_mesh() -> jax.sharding.Mesh:
     """Degenerate (1, 1) mesh for single-device correctness tests."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_task_mesh(num_shards: int | None = None) -> jax.sharding.Mesh:
+    """1-D 'tasks' mesh for the task-sharded AMTL engine (engine='sharded').
+
+    Uses the first `num_shards` local devices (default: all of them); the
+    single-CPU correctness tests get a degenerate 1-shard mesh, the 8-fake-
+    device suites a real multi-shard one from the same call.
+    """
+    devices = jax.devices()
+    n = len(devices) if num_shards is None else num_shards
+    if not 1 <= n <= len(devices):
+        raise ValueError(f"num_shards must be in [1, {len(devices)}] "
+                         f"(visible devices), got {num_shards}")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("tasks",))
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

@@ -1,0 +1,117 @@
+"""Cross-engine reference validation: every jitted engine vs the paper-
+faithful float64 discrete-event reference dynamics.
+
+`core/simulator.py::simulate_amtl` executes the exact §III.4 mathematics in
+float64 numpy with explicit node clocks and stale snapshot reads — it is
+the repo's ground-truth AMTL dynamics, previously only compared to the
+jitted engines indirectly.  This suite runs all four engines
+(dense/delta/batch/sharded) on the same `make_synthetic` problem with the
+same (eta, eta_k, tau) and asserts:
+
+  * the four engines produce the SAME iterates bitwise (at prox_every=1 /
+    event_batch=1 their event streams coincide by construction);
+  * every engine's objective trajectory tracks the simulator's at equal
+    event counts — loosely early (the two executions activate tasks in
+    different random orders, so transients differ), tightly once both
+    settle (the BF fixed point is unique for this strongly convex f);
+  * the final iterates agree with the float64 reference W*.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (MTLProblem, NetworkModel, make_synthetic,
+                        simulate_amtl)
+from repro.core.amtl import AMTLConfig, amtl_solve
+from repro.core.operators import amtl_max_step
+from repro.launch.mesh import make_task_mesh
+
+T, D, N, TAU, EPOCHS = 4, 12, 30, 4, 400
+ENGINES = ("dense", "delta", "batch", "sharded")
+
+
+@pytest.fixture(scope="module")
+def sim_problem():
+    return make_synthetic(num_tasks=T, samples=N, dim=D, seed=0)
+
+
+@pytest.fixture(scope="module")
+def stacked_problem(sim_problem):
+    return MTLProblem(jnp.asarray(np.stack(sim_problem.xs), jnp.float32),
+                      jnp.asarray(np.stack(sim_problem.ys), jnp.float32),
+                      "lstsq", "nuclear", 0.1)
+
+
+@pytest.fixture(scope="module")
+def reference(sim_problem, stacked_problem):
+    """Float64 event-driven reference run, one objective per event."""
+    eta = 1.0 / stacked_problem.lipschitz()
+    sim = simulate_amtl(sim_problem,
+                        NetworkModel(delay_offset=0.0, delay_jitter=1.0),
+                        num_epochs=EPOCHS, eta=float(eta),
+                        eta_k=float(amtl_max_step(TAU, T)), tau=TAU, seed=0)
+    assert sim.iterations == EPOCHS * T
+    # objective after each full sweep of T events, aligned with the
+    # engines' per-epoch recording
+    return sim, np.asarray(sim.objectives)[T - 1::T]
+
+
+@pytest.fixture(scope="module")
+def engine_runs(stacked_problem):
+    eta = 1.0 / stacked_problem.lipschitz()
+    eta_k = amtl_max_step(TAU, T)
+    w0 = jnp.zeros((D, T), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for engine in ENGINES:
+        cfg = AMTLConfig(eta=eta, eta_k=eta_k, tau=TAU, engine=engine)
+        mesh = None
+        if engine in ("batch", "sharded"):
+            # event_batch=1 keeps the amortized-prox schedule identical to
+            # the one-event engines, so all four event streams coincide.
+            cfg = cfg._replace(event_batch=1, prox_every=1)
+        if engine == "sharded":
+            mesh = make_task_mesh(1)
+        out[engine] = amtl_solve(stacked_problem, cfg, w0, key,
+                                 num_epochs=EPOCHS, mesh=mesh)
+    return out
+
+
+def test_engines_agree_bitwise_with_each_other(engine_runs):
+    """At prox_every=1/event_batch=1 all four engines replay the same event
+    stream and arithmetic — iterates and trajectories must be identical."""
+    ref = engine_runs["dense"]
+    for engine in ENGINES[1:]:
+        res = engine_runs[engine]
+        np.testing.assert_array_equal(np.asarray(ref.v), np.asarray(res.v),
+                                      err_msg=engine)
+        np.testing.assert_array_equal(np.asarray(ref.objectives),
+                                      np.asarray(res.objectives),
+                                      err_msg=engine)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_objective_trajectory_tracks_float64_reference(engine, engine_runs,
+                                                       reference):
+    _, sim_traj = reference
+    objs = np.asarray(engine_runs[engine].objectives, np.float64)
+    rel = np.abs(objs - sim_traj) / sim_traj
+    # Transient: task activation orders differ between the event-driven
+    # reference and the uniform-sampling engines (measured peak ~0.22).
+    assert rel.max() < 0.35, rel.max()
+    # Settled: both approach the unique BF fixed point.
+    assert rel[100:].max() < 0.03, rel[100:].max()
+    assert rel[-1] < 0.01, rel[-1]
+    # Objectives must actually decrease toward the reference limit, not
+    # merely end close: epoch-100 value strictly below epoch-0.
+    assert objs[-1] < objs[100] < objs[0]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_final_iterate_matches_float64_reference(engine, engine_runs,
+                                                 reference):
+    sim, _ = reference
+    w = np.asarray(engine_runs[engine].w, np.float64)
+    rel = np.linalg.norm(w - sim.w) / np.linalg.norm(sim.w)
+    assert rel < 0.02, rel  # measured ~0.003 (float32 engine vs float64 ref)
