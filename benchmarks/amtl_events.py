@@ -14,11 +14,16 @@ ring writes.  The batch engine runs EVENT_BATCH events per loop step with
 one rank-PROX_RANK prox per batch and batched conflict-aware column
 updates — the amortization axis the delta engine pays per event (the prox
 `lax.cond` carries a (d, T) cache copy) is hoisted to once per batch.
-Because the batch engine's prox cadence is EVENT_BATCH (not PROX_EVERY), a
-`delta_matched` row runs the delta engine at prox_every=EVENT_BATCH too:
-`batch_over_delta_matched` isolates the batching machinery's gain from the
-cheaper prox schedule, while `batch_over_delta` is the end-to-end win over
-the recorded delta production config.  The `sharded` row runs the batch
+Because the batch engine's default prox cadence is EVENT_BATCH (not
+PROX_EVERY), a `delta_matched` row runs the delta engine at
+prox_every=EVENT_BATCH too: `batch_over_delta_matched` isolates the
+batching machinery's gain from the cheaper prox schedule, while
+`batch_over_delta` is the end-to-end win over the recorded delta
+production config.  The `batch_k4` row runs the DECOUPLED prox cadence
+(prox_every = 4*EVENT_BATCH, the session API's k=4): one prox refresh per
+four batches through the carried (d, T) prox cache;
+`speedup.batch_k4_over_batch` quantifies what the cadence decoupling buys
+on top of per-batch refreshes.  The `sharded` row runs the batch
 configuration with the T task columns partitioned over ALL visible devices
 (`config.task_shards`; CI forces 8 fake host devices) — one all_gather +
 replicated prox per batch, shard-local column updates.  On fake host
@@ -52,6 +57,7 @@ PROX_RANK = 16
 EVENT_BATCH = 32       # CPU sweet spot: larger batches amortize the prox
                        # further but the per-batch gather/scatter fixed cost
                        # grows; 32 maximizes events/sec at this scale
+PROX_K = 4             # batch_k4 row: prox_every = PROX_K * EVENT_BATCH
 JSON_PATH = "BENCH_amtl_events.json"
 
 
@@ -89,10 +95,13 @@ def _state_bytes(cfg: AMTLConfig, task_shards: int = 1) -> dict:
         ring = (task_shards * (cfg.tau + 1) * D * itemsize
                 + (cfg.tau + 1) * 4)
         total = ring + D * T * itemsize                # + v
-        if cfg.engine == "delta" and cfg.prox_every > 1:
-            total += D * T * itemsize                  # + live p_cache
-        # engine="batch" carries no prox cache: the refresh happens
-        # unconditionally at each batch's first event.
+        # live (d, T) prox cache: delta with any amortization, batch/
+        # sharded only at the decoupled cadence (prox_every > event_batch;
+        # at the aligned cadence each batch refreshes before reading).
+        aligned = cfg.event_batch if cfg.engine in ("batch", "sharded") \
+            else 1
+        if cfg.prox_every > aligned:
+            total += D * T * itemsize
     return {"ring_bytes": ring, "state_bytes": total}
 
 
@@ -107,6 +116,8 @@ def run() -> list[Row]:
     batch_cfg = AMTLConfig(eta=0.05, eta_k=eta_k, tau=TAU, engine="batch",
                            prox_every=EVENT_BATCH, event_batch=EVENT_BATCH,
                            prox_rank=PROX_RANK)
+    # decoupled cadence: one prox per PROX_K batches via the carried cache
+    batch_k4_cfg = batch_cfg._replace(prox_every=PROX_K * EVENT_BATCH)
 
     # task-sharded engine: batch config over all visible devices (T=128 is
     # divisible by any power-of-two host-device count CI uses)
@@ -121,26 +132,31 @@ def run() -> list[Row]:
     delta_eps = _events_per_sec(problem, delta_cfg, DELTA_EVENTS)
     matched_eps = _events_per_sec(problem, delta_matched_cfg, BATCH_EVENTS)
     batch_eps = _events_per_sec(problem, batch_cfg, BATCH_EVENTS)
+    batch_k4_eps = _events_per_sec(problem, batch_k4_cfg, BATCH_EVENTS)
     sharded_eps = _events_per_sec(problem, sharded_cfg, BATCH_EVENTS,
                                   mesh=mesh)
     dense_mem = _state_bytes(dense_cfg)
     delta_mem = _state_bytes(delta_cfg)
     batch_mem = _state_bytes(batch_cfg)
+    batch_k4_mem = _state_bytes(batch_k4_cfg)
     sharded_mem = _state_bytes(sharded_cfg, task_shards)
     speedup = {
         "delta_over_dense": delta_eps / max(dense_eps, 1e-12),
         "batch_over_dense": batch_eps / max(dense_eps, 1e-12),
         "batch_over_delta": batch_eps / max(delta_eps, 1e-12),
         "batch_over_delta_matched": batch_eps / max(matched_eps, 1e-12),
+        "batch_k4_over_batch": batch_k4_eps / max(batch_eps, 1e-12),
         "sharded_over_batch": sharded_eps / max(batch_eps, 1e-12),
     }
 
     report = {
         # prox_every is the delta row's cadence; the batch, delta_matched,
-        # and sharded rows run at prox cadence event_batch.
+        # and sharded rows run at prox cadence event_batch; batch_k4 at
+        # prox cadence prox_k * event_batch (decoupled).
         "config": {"d": D, "T": T, "tau": TAU, "n_samples": N_SAMPLES,
                    "prox_every": PROX_EVERY, "prox_rank": PROX_RANK,
-                   "event_batch": EVENT_BATCH, "task_shards": task_shards,
+                   "event_batch": EVENT_BATCH, "prox_k": PROX_K,
+                   "task_shards": task_shards,
                    "backend": jax.default_backend()},
         "dense": {"events_per_sec": dense_eps,
                   "us_per_event": 1e6 / dense_eps, **dense_mem},
@@ -150,6 +166,9 @@ def run() -> list[Row]:
                           "us_per_event": 1e6 / matched_eps, **delta_mem},
         "batch": {"events_per_sec": batch_eps,
                   "us_per_event": 1e6 / batch_eps, **batch_mem},
+        # prox cadence PROX_K * event_batch (the decoupled session cadence)
+        "batch_k4": {"events_per_sec": batch_k4_eps,
+                     "us_per_event": 1e6 / batch_k4_eps, **batch_k4_mem},
         "sharded": {"events_per_sec": sharded_eps,
                     "us_per_event": 1e6 / sharded_eps, **sharded_mem},
         "speedup": speedup,
@@ -173,6 +192,10 @@ def run() -> list[Row]:
             f"vs_delta={speedup['batch_over_delta']:.2f}x "
             f"vs_delta_matched={speedup['batch_over_delta_matched']:.2f}x "
             f"vs_dense={speedup['batch_over_dense']:.2f}x"),
+        Row("amtl_events/batch_k4", 1e6 / batch_k4_eps,
+            f"events/sec={batch_k4_eps:.2f} "
+            f"(prox_every={PROX_K * EVENT_BATCH}) "
+            f"vs_batch={speedup['batch_k4_over_batch']:.2f}x"),
         Row("amtl_events/sharded", 1e6 / sharded_eps,
             f"events/sec={sharded_eps:.2f} shards={task_shards} "
             f"vs_batch={speedup['sharded_over_batch']:.2f}x"),

@@ -3,7 +3,13 @@
 Arrays are pulled to host (fully addressable on this container; on a real
 pod each host would write its shard — the layout keeps one file per step
 so that extension is local).  Restore rebuilds the exact pytree structure
-and re-places leaves with an optional sharding tree.
+and re-places leaves with an optional sharding tree; values round-trip
+bitwise.  Both model params and the AMTL engine-session states
+(`make_engine(...).init(...)`, any engine, sharded included) go through
+here: restore with `like=engine.init(...)` and the next `engine.run`
+resumes the event stream bitwise.  A record whose key set, shapes, or
+dtypes disagree with `like` fails loudly, naming the drifted entries — a
+layout change in a state NamedTuple cannot silently misload a checkpoint.
 """
 from __future__ import annotations
 
@@ -49,16 +55,34 @@ def restore(ckpt_dir: str, step: int, like: Any,
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     data = np.load(path)
     flat_like = jax.tree_util.tree_flatten_with_path(like)
+    want_keys = [_SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                           for k in kpath)
+                 for kpath, _ in flat_like[0]]
+    missing = [k for k in want_keys if k not in data]
+    extra = sorted(set(data.files) - set(want_keys))
+    if missing or extra:
+        raise ValueError(
+            f"checkpoint {path} does not match the `like` pytree layout: "
+            f"missing keys {missing}, unexpected keys {extra} — was the "
+            "state's structure changed since this checkpoint was saved?")
     leaves = []
     sh_leaves = (jax.tree_util.tree_leaves(
         shardings, is_leaf=lambda x: hasattr(x, "spec"))
         if shardings is not None else None)
-    for i, (kpath, leaf) in enumerate(flat_like[0]):
-        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in kpath)
+    for i, ((kpath, leaf), key) in enumerate(zip(flat_like[0], want_keys)):
         arr = data[key]
+        if arr.shape != tuple(getattr(leaf, "shape", arr.shape)):
+            raise ValueError(
+                f"checkpoint {path}: leaf {key!r} has shape {arr.shape} "
+                f"but `like` expects {leaf.shape}")
+        want_dtype = getattr(leaf, "dtype", None)
+        if want_dtype is not None and arr.dtype != want_dtype:
+            raise ValueError(
+                f"checkpoint {path}: leaf {key!r} has dtype {arr.dtype} "
+                f"but `like` expects {want_dtype} — dtype drift would "
+                "silently change the resumed computation")
         if sh_leaves is not None:
             leaves.append(jax.device_put(arr, sh_leaves[i]))
         else:
-            leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+            leaves.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(flat_like[1], leaves)

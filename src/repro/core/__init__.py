@@ -1,6 +1,7 @@
 """AMTL core: the paper's contribution as composable JAX modules."""
-from repro.core.amtl import (AMTLConfig, AMTLResult, amtl_events_only,
-                             amtl_solve, current_iterate, default_config)
+from repro.core.amtl import (AMTLConfig, AMTLEngine, AMTLResult,
+                             amtl_events_only, amtl_solve, current_iterate,
+                             default_config, make_engine, validate_config)
 from repro.core.dynamic_step import DelayHistory, dynamic_multiplier
 from repro.core.losses import MTLProblem, get_loss
 from repro.core.operators import (amtl_max_step, backward, backward_forward,
@@ -15,7 +16,8 @@ from repro.core.simulator import (NetworkModel, SimProblem, SimResult,
 from repro.core.smtl import fista_solve, reference_optimum, smtl_solve
 
 __all__ = [
-    "AMTLConfig", "AMTLResult", "amtl_events_only", "amtl_solve",
+    "AMTLConfig", "AMTLEngine", "AMTLResult", "amtl_events_only",
+    "amtl_solve", "make_engine", "validate_config",
     "current_iterate", "default_config", "rollback_columns",
     "rollback_columns_batch", "rollback_columns_shard",
     "DelayHistory", "dynamic_multiplier", "MTLProblem", "get_loss",

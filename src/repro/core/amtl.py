@@ -39,17 +39,20 @@ Four engines implement the same mathematics:
   engine="batch" — the delta ring, `event_batch` events per loop step.
       Each step replays `event_batch` draws of the serial PRNG chain (so
       the (task, staleness) event stream is identical to the one-event
-      engines by construction), performs ONE server prox at the batch's
-      first event (`prox_every` must equal `event_batch` — the amortized
-      schedule of the delta engine, aligned to batch boundaries), and
-      applies all column updates through `ops.amtl_event_batch` (gather ->
-      fused forward/KM/undo-emit -> scatter).  Within-batch conflicts —
-      duplicate tasks — are serialized in event order: a later event reads
-      the column as left by the earlier in-batch write, and its undo-log
-      entry records that pre-write column, so the ring replays exactly as
-      if the events had been applied one at a time.  For aligned configs
-      (`prox_every == event_batch`, same key) the batch engine reproduces
-      the delta engine's iterates bitwise on the CPU oracle path.
+      engines by construction), refreshes the server prox only at batch
+      boundaries, and applies all column updates through
+      `ops.amtl_event_batch` (gather -> fused forward/KM/undo-emit ->
+      scatter).  Within-batch conflicts — duplicate tasks — are serialized
+      in event order: a later event reads the column as left by the
+      earlier in-batch write, and its undo-log entry records that
+      pre-write column, so the ring replays exactly as if the events had
+      been applied one at a time.  The prox cadence is decoupled from the
+      batch size: `prox_every = k * event_batch` refreshes the prox at
+      every k-th batch's first event and carries the result in a (d, T)
+      prox cache between batches (k == 1 refreshes every batch and carries
+      no cache).  For matched cadences (same `prox_every`, same key) the
+      batch engine reproduces the delta engine's iterates bitwise on the
+      CPU oracle path.
 
   engine="sharded" — the batch engine with the T task columns partitioned
       over a 1-D "tasks" mesh axis (shard_map).  Each shard owns a (d,
@@ -59,10 +62,12 @@ Four engines implement the same mathematics:
       Every shard replays the FULL serial PRNG chain and masks events to
       their owner, so the (task, staleness) event stream is invariant to
       shard count by construction.  Collectives are paid only at prox
-      cadence — one `all_gather` per batch assembles the stale iterate for
-      the server prox (SVT / randomized SVT), whose replicated result is
-      the broadcast back; gradients, column updates, and ring writes stay
-      shard-local.  This is exactly the paper's server/worker communication
+      cadence — one `all_gather` per prox refresh assembles the stale
+      iterate for the server prox (SVT / randomized SVT), whose replicated
+      result is the broadcast back; gradients, column updates, and ring
+      writes stay shard-local.  With the decoupled cadence (`prox_every =
+      k * event_batch`) the all_gather is paid only every k batches — the
+      true "communication only at prox cadence" limit.  This is exactly the paper's server/worker communication
       pattern: task nodes hold their data locally, the central server runs
       the prox.  On a 1-device mesh the engine reproduces engine="batch"
       bitwise on the CPU oracle path, and per-shard `delay_offsets` skews
@@ -72,18 +77,36 @@ Four engines implement the same mathematics:
 This is bit-faithful to Algorithm 1's mathematics while being jit-compiled,
 deterministic under a PRNG key, and mesh-shardable.  Wall-clock behaviour
 (Tables I/III) is studied separately by `repro.core.simulator`.
+
+The public surface is the *session* API — the paper's deployment story is
+a long-lived asynchronous system, so the solver is a resumable session
+over a streaming event source rather than a one-shot batch call:
+
+    engine = make_engine(problem, cfg, mesh=None)   # -> AMTLEngine
+    state  = engine.init(v0, key)
+    state  = engine.run(state, delay_offsets, num_events)   # resumable
+    v      = engine.iterate(state)
+
+`run` is jitted (one compile per distinct `num_events`), advances the
+state by any multiple of `engine.events_per_step` events, and composes
+bitwise: `run(·, n + m)` == `run(run(·, n), m)` for every engine.  Engine
+states are plain pytrees of arrays and round-trip through
+`repro.checkpoint.save/restore`, resuming bitwise — including the sharded
+state under a mesh.  `amtl_solve` (epoch metrics) and `amtl_events_only`
+(bench path) are thin wrappers over the session API.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.dynamic_step import DelayHistory, dynamic_multiplier
 from repro.core.losses import MTLProblem
-from repro.core.operators import (amtl_max_step, backward, km_block_update,
+from repro.core.operators import (amtl_max_step, backward,
+                                  fixed_point_residual, km_block_update,
                                   rollback_columns, rollback_columns_batch,
                                   rollback_columns_shard)
 from repro.core.prox import svt_randomized
@@ -104,19 +127,22 @@ class AMTLConfig(NamedTuple):
     delay_jitter: float = 1.0
     # "delta": O(d) per-event state with an undo-log ring (default).
     # "dense": the seed (tau+1, d, T) full-iterate ring, for equivalence.
-    # "batch": the delta ring, event_batch events per loop step with one
-    #          server prox per batch and conflict-aware batched updates.
+    # "batch": the delta ring, event_batch events per loop step with
+    #          batch-boundary prox refreshes and conflict-aware updates.
     # "sharded": the batch engine with task columns partitioned over a
-    #          "tasks" mesh axis; one all_gather per batch at prox cadence.
+    #          "tasks" mesh axis; one all_gather per prox refresh.
     engine: str = "delta"
     # Server prox amortization (paper §III-C): refresh the backward step
     # every K events, reuse the cached prox in between.  K=1 == exact AMTL.
+    # For engine="batch"/"sharded" K must be a multiple of event_batch
+    # (refreshes happen at batch boundaries); K = k*event_batch with k > 1
+    # carries the refreshed prox in a (d, T) cache across batches — the
+    # sharded engine then pays its all_gather only every k batches.
     prox_every: int = 1
     # If set (nuclear reg only), prox refreshes use the randomized SVT
     # sketch at this rank instead of the dense SVD — the large-d*T regime.
     prox_rank: int | None = None
-    # engine="batch" only: activations applied per loop step.  Must equal
-    # prox_every (the batch engine refreshes the prox once per batch).
+    # engine="batch"/"sharded" only: activations applied per loop step.
     event_batch: int = 1
 
 
@@ -142,18 +168,22 @@ class DeltaAMTLState(NamedTuple):
 
 
 class BatchAMTLState(NamedTuple):
-    """Batch-engine state: the delta ring without the prox cache.
+    """Batch-engine state: the delta ring with a per-cadence prox cache.
 
-    The batch engine refreshes the server prox unconditionally at each
-    batch's first event (prox_every == event_batch), so no (d, T) cache is
-    carried between loop steps — the per-event `lax.cond` copy of that
-    cache is the delta engine's dominant non-prox cost.
+    At the aligned cadence (prox_every == event_batch) the prox is
+    refreshed unconditionally at each batch's first event, so no (d, T)
+    cache is carried between loop steps (`p_cache` stays a (0, 0) stub) —
+    the per-event `lax.cond` copy of that cache is the delta engine's
+    dominant non-prox cost.  With the decoupled cadence (prox_every =
+    k*event_batch, k > 1) `p_cache` holds the last refreshed prox and is
+    reused by the k-1 batches between refreshes.
     """
     v: Array               # (d, T) current iterate (the only full copy)
     delta_ring: Array      # (tau+1, d) pre-write column per event (undo log)
     task_ring: Array       # (tau+1,) int32 task written at each event
     ptr: Array             # int32 slot of the newest event
     event: Array           # int32 global event counter
+    p_cache: Array         # (d, T) cached prox (prox_every > event_batch)
     history: DelayHistory
     key: Array
 
@@ -172,6 +202,7 @@ class ShardedAMTLState(NamedTuple):
     task_ring: Array       # (tau+1,) int32 GLOBAL task id per event slot
     ptr: Array             # int32 slot of the newest event (replicated)
     event: Array           # int32 global event counter (replicated)
+    p_cache: Array         # (d, T) cached prox, replicated (k > 1 cadence)
     history: DelayHistory  # per-task delays, rows sharded over "tasks"
     key: Array             # PRNG (replicated serial chain)
 
@@ -204,14 +235,23 @@ def init_delta_state(cfg: AMTLConfig, v0: Array, num_tasks: int,
         task_ring=jnp.zeros((depth,), jnp.int32),
         ptr=jnp.zeros((), jnp.int32),
         event=jnp.zeros((), jnp.int32),
-        # prox_every=1 recomputes the prox every event and never reads the
-        # cache, so don't carry a dead (d, T) buffer through the loop;
-        # with amortization, event 0 always refreshes before the first read.
-        p_cache=(jnp.zeros_like(v0) if cfg.prox_every > 1
-                 else jnp.zeros((0, 0), v0.dtype)),
+        p_cache=_prox_cache_init(cfg, v0),
         history=DelayHistory.create(num_tasks, cfg.delay_window),
         key=key,
     )
+
+
+def _prox_cache_init(cfg: AMTLConfig, v0: Array) -> Array:
+    """(d, T) zeros when a cache is actually carried, else a (0, 0) stub.
+
+    The aligned cadence (prox_every <= event_batch for the batch engines,
+    prox_every == 1 for delta) refreshes before every read and never
+    consults the cache, so no dead (d, T) buffer rides the loop carry;
+    with amortization, event 0 always refreshes before the first read.
+    """
+    carried = cfg.prox_every > (cfg.event_batch
+                                if cfg.engine in ("batch", "sharded") else 1)
+    return jnp.zeros_like(v0) if carried else jnp.zeros((0, 0), v0.dtype)
 
 
 def init_batch_state(cfg: AMTLConfig, v0: Array, num_tasks: int,
@@ -223,6 +263,7 @@ def init_batch_state(cfg: AMTLConfig, v0: Array, num_tasks: int,
         task_ring=jnp.zeros((depth,), jnp.int32),
         ptr=jnp.zeros((), jnp.int32),
         event=jnp.zeros((), jnp.int32),
+        p_cache=_prox_cache_init(cfg, v0),
         history=DelayHistory.create(num_tasks, cfg.delay_window),
         key=key,
     )
@@ -237,6 +278,7 @@ def init_sharded_state(cfg: AMTLConfig, v0: Array, num_tasks: int,
         task_ring=jnp.zeros((depth,), jnp.int32),
         ptr=jnp.zeros((), jnp.int32),
         event=jnp.zeros((), jnp.int32),
+        p_cache=_prox_cache_init(cfg, v0),
         history=DelayHistory.create(num_tasks, cfg.delay_window),
         key=key,
     )
@@ -389,10 +431,12 @@ def _one_batch(problem: MTLProblem, cfg: AMTLConfig, delay_offsets: Array,
     """`event_batch` ARock activations in one step (batch engine).
 
     Serial-replay equivalent: the PRNG chain, the amortized prox schedule
-    (refresh at the batch's first event == events that are multiples of
-    prox_every), the per-event KM arithmetic, and the undo-log contents all
-    match `event_batch` consecutive `_one_event_delta` steps bitwise on the
-    CPU oracle path.
+    (refresh at batch-first events that are multiples of prox_every), the
+    per-event KM arithmetic, and the undo-log contents all match
+    `event_batch` consecutive `_one_event_delta` steps bitwise on the CPU
+    oracle path — at the aligned cadence (prox_every == event_batch) and
+    the decoupled one (prox_every = k*event_batch, refresh every k-th
+    batch via the carried prox cache).
     """
     from repro.kernels.ops import amtl_event_batch
 
@@ -400,25 +444,38 @@ def _one_batch(problem: MTLProblem, cfg: AMTLConfig, delay_offsets: Array,
     bsz = cfg.event_batch
     use_randomized = cfg.prox_rank is not None and problem.reg_name == "nuclear"
     # Folded off the batch-start key — the key the serial engine would hold
-    # at its refresh event (the batch's first event).
+    # at its refresh event (a refresh batch's first event).
     k_prox = jax.random.fold_in(state.key, 7) if use_randomized else None
     key, ts, nus = _sample_activation_batch(cfg, delay_offsets, state.key,
                                             problem.num_tasks, state.event,
                                             bsz)
     v = state.v
 
-    # One server prox per batch, at the batch's first event: stale read at
-    # staleness nu_0 (vectorized rollback — one masked scatter), own column
-    # patched current, then the exact or sketched backward step.
-    v_hat = rollback_columns_batch(v, state.delta_ring, state.task_ring,
-                                   state.ptr, nus[0], cfg.tau)
-    v_hat = v_hat.at[:, ts[0]].set(v[:, ts[0]])
-    if use_randomized:
-        p = svt_randomized(v_hat, jnp.asarray(cfg.eta * problem.lam,
-                                              v_hat.dtype),
-                           rank=cfg.prox_rank, key=k_prox)
+    # Server prox at the batch's first event: stale read at staleness nu_0
+    # (vectorized rollback — one masked scatter), own column patched
+    # current, then the exact or sketched backward step.
+    def refresh(_):
+        v_hat = rollback_columns_batch(v, state.delta_ring, state.task_ring,
+                                       state.ptr, nus[0], cfg.tau)
+        v_hat = v_hat.at[:, ts[0]].set(v[:, ts[0]])
+        if use_randomized:
+            return svt_randomized(v_hat, jnp.asarray(cfg.eta * problem.lam,
+                                                     v_hat.dtype),
+                                  rank=cfg.prox_rank, key=k_prox)
+        return backward(problem, v_hat, cfg.eta)
+
+    if cfg.prox_every <= bsz:
+        # Aligned cadence: refresh unconditionally every batch; the (0, 0)
+        # cache stub rides the carry untouched (no copy).
+        p = refresh(None)
+        p_cache = state.p_cache
     else:
-        p = backward(problem, v_hat, cfg.eta)
+        # Decoupled cadence: refresh only at every k-th batch's first
+        # event — exactly the events where the serial delta engine at the
+        # same prox_every refreshes — else reuse the carried cache.
+        do_prox = (state.event % cfg.prox_every) == 0
+        p = jax.lax.cond(do_prox, refresh, lambda _: state.p_cache, None)
+        p_cache = p
 
     # Per-event forward-step gradients at the batch-constant prox.  g_t
     # depends only on (t, p[:, t]) — not on v — so duplicates need no
@@ -458,6 +515,7 @@ def _one_batch(problem: MTLProblem, cfg: AMTLConfig, delay_offsets: Array,
         task_ring=state.task_ring.at[slots].set(ts[bsz - keep:]),
         ptr=(state.ptr + bsz) % depth,
         event=state.event + bsz,
+        p_cache=p_cache,
         history=history,
         key=key,
     )
@@ -472,6 +530,7 @@ def _sharded_state_specs(axis: str = TASK_AXIS) -> ShardedAMTLState:
         task_ring=sp["replicated"],
         ptr=sp["replicated"],
         event=sp["replicated"],
+        p_cache=sp["replicated"],
         history=DelayHistory(buf=sp["per_task"], count=sp["per_task"]),
         key=sp["replicated"],
     )
@@ -484,9 +543,11 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
 
     Communication schedule — the paper's server/worker pattern, collectives
     only at prox cadence: each shard reconstructs the stale bits of ITS
-    columns from its private undo ring, ONE `all_gather` per batch
-    assembles the (d, T) stale iterate, every shard runs the same server
-    prox on it (the replicated result is the broadcast back), and
+    columns from its private undo ring, ONE `all_gather` per prox refresh
+    (every k-th batch under the decoupled cadence prox_every =
+    k*event_batch) assembles the (d, T) stale iterate, every shard runs
+    the same server prox on it (the replicated result is the broadcast
+    back, carried in the replicated prox cache between refreshes), and
     gradients, column updates, and ring writes stay shard-local.
 
     Every shard replays the full serial PRNG chain and masks events to
@@ -520,23 +581,35 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
         ring = st.delta_ring[0]                    # (depth, d) private ring
 
         # Shard-local stale reconstruction at the batch's first event, then
-        # patch that event's column current on its owner shard.
-        v_hat_loc = rollback_columns_shard(v, ring, st.task_ring, st.ptr,
-                                           nus[0], cfg.tau, t_off)
-        c0 = jnp.clip(ts[0] - t_off, 0, n_local - 1)
-        own0 = (ts[0] >= t_off) & (ts[0] < t_off + n_local)
-        v_hat_loc = v_hat_loc.at[:, c0].set(
-            jnp.where(own0, v[:, c0], v_hat_loc[:, c0]))
-
-        # The batch's ONE collective: assemble the global stale iterate for
-        # the server prox; the prox result is replicated (= broadcast).
-        v_hat = jax.lax.all_gather(v_hat_loc, axis, axis=1, tiled=True)
-        if use_randomized:
-            p = svt_randomized(v_hat, jnp.asarray(cfg.eta * problem.lam,
+        # patch that event's column current on its owner shard.  The ONE
+        # collective: assemble the global stale iterate for the server
+        # prox; the prox result is replicated (= broadcast).  With the
+        # decoupled cadence this whole branch — all_gather included — runs
+        # only at every k-th batch; the predicate is replicated, so every
+        # shard takes the same branch and the collective stays SPMD-safe.
+        def refresh(_):
+            v_hat_loc = rollback_columns_shard(v, ring, st.task_ring,
+                                               st.ptr, nus[0], cfg.tau,
+                                               t_off)
+            c0 = jnp.clip(ts[0] - t_off, 0, n_local - 1)
+            own0 = (ts[0] >= t_off) & (ts[0] < t_off + n_local)
+            v_hat_loc2 = v_hat_loc.at[:, c0].set(
+                jnp.where(own0, v[:, c0], v_hat_loc[:, c0]))
+            v_hat = jax.lax.all_gather(v_hat_loc2, axis, axis=1, tiled=True)
+            if use_randomized:
+                return svt_randomized(v_hat,
+                                      jnp.asarray(cfg.eta * problem.lam,
                                                   v_hat.dtype),
-                               rank=cfg.prox_rank, key=k_prox)
+                                      rank=cfg.prox_rank, key=k_prox)
+            return backward(problem_l, v_hat, cfg.eta)
+
+        if cfg.prox_every <= bsz:
+            p = refresh(None)
+            p_cache = st.p_cache
         else:
-            p = backward(problem_l, v_hat, cfg.eta)
+            do_prox = (st.event % cfg.prox_every) == 0
+            p = jax.lax.cond(do_prox, refresh, lambda _: st.p_cache, None)
+            p_cache = p
 
         p_cols = p[:, ts]                                    # (d, bsz)
         lts, owned = shard_local_tasks(ts, t_off, n_local)
@@ -577,6 +650,7 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
             task_ring=st.task_ring.at[slots].set(ts[bsz - keep:]),
             ptr=(st.ptr + bsz) % depth,
             event=st.event + bsz,
+            p_cache=p_cache,
             history=history,
             key=key,
         )
@@ -591,12 +665,16 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
     return step(problem.xs, problem.ys, delay_offsets, state)
 
 
-def _engine(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array,
-            mesh=None):
-    """(initial state, step fn, events per step) for cfg.
+def validate_config(cfg: AMTLConfig, reg_name: str | None = None) -> None:
+    """The one config-validation path, shared by `make_engine` (and thus
+    `amtl_solve`/`amtl_events_only`) and `default_config`.
 
-    Read V off the returned state via `current_iterate`.
+    `reg_name` enables the problem-dependent prox_rank check when the
+    caller knows the regularizer.
     """
+    if cfg.engine not in ("delta", "dense", "batch", "sharded"):
+        raise ValueError(f"unknown AMTL engine {cfg.engine!r}; "
+                         "expected 'delta', 'dense', 'batch', or 'sharded'")
     if cfg.prox_every < 1:
         raise ValueError(f"prox_every must be >= 1, got {cfg.prox_every} "
                          "(1 = exact prox every event)")
@@ -607,56 +685,142 @@ def _engine(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array,
             f"engine={cfg.engine!r} processes one event per step; "
             f"event_batch={cfg.event_batch} requires engine='batch' or "
             "engine='sharded'")
-    if mesh is not None and cfg.engine != "sharded":
-        raise ValueError(
-            f"mesh is only meaningful for engine='sharded' "
-            f"(got engine={cfg.engine!r})")
-    if cfg.prox_rank is not None and problem.reg_name != "nuclear":
+    if cfg.prox_rank is not None and reg_name is not None \
+            and reg_name != "nuclear":
         raise ValueError(
             "prox_rank selects the randomized SVT refresh, which only "
-            f"exists for reg_name='nuclear' (got {problem.reg_name!r})")
+            f"exists for reg_name='nuclear' (got {reg_name!r})")
+    if cfg.engine == "dense" and (cfg.prox_every != 1
+                                  or cfg.prox_rank is not None):
+        raise ValueError("engine='dense' is the exact seed baseline; "
+                         "prox_every>1 / prox_rank require "
+                         "engine='delta', 'batch', or 'sharded'")
+    if cfg.engine in ("batch", "sharded") \
+            and cfg.prox_every % cfg.event_batch != 0:
+        raise ValueError(
+            f"engine={cfg.engine!r} refreshes the server prox only at "
+            f"batch boundaries, so prox_every ({cfg.prox_every}) must be a "
+            f"multiple of event_batch ({cfg.event_batch})")
+
+
+def _resolve_mesh(problem: MTLProblem, cfg: AMTLConfig, mesh):
+    """Validate/default the mesh; returns (mesh or None, n_shards or None)."""
+    if cfg.engine != "sharded":
+        if mesh is not None:
+            raise ValueError(
+                f"mesh is only meaningful for engine='sharded' "
+                f"(got engine={cfg.engine!r})")
+        return None, None
+    if mesh is None:
+        from repro.launch.mesh import make_task_mesh
+        mesh = make_task_mesh()
+    if TASK_AXIS not in mesh.axis_names:
+        raise ValueError(
+            f"engine='sharded' needs a mesh with a {TASK_AXIS!r} axis; "
+            f"got axes {mesh.axis_names}")
+    n_shards = mesh.shape[TASK_AXIS]
+    if problem.num_tasks % n_shards != 0:
+        raise ValueError(
+            f"num_tasks ({problem.num_tasks}) must be divisible by the "
+            f"{TASK_AXIS!r} mesh axis size ({n_shards})")
+    return mesh, n_shards
+
+
+def _step_fn(cfg: AMTLConfig, mesh):
     if cfg.engine == "dense":
-        if cfg.prox_every != 1 or cfg.prox_rank is not None:
-            raise ValueError("engine='dense' is the exact seed baseline; "
-                             "prox_every>1 / prox_rank require "
-                             "engine='delta', 'batch', or 'sharded'")
-        return (init_state(cfg, v0, problem.num_tasks, key),
-                _one_event_dense, 1)
+        return _one_event_dense
     if cfg.engine == "delta":
-        return (init_delta_state(cfg, v0, problem.num_tasks, key),
-                _one_event_delta, 1)
-    if cfg.engine in ("batch", "sharded"):
-        if cfg.prox_every != cfg.event_batch:
-            raise ValueError(
-                f"engine={cfg.engine!r} refreshes the server prox once per "
-                f"batch, so prox_every ({cfg.prox_every}) must equal "
-                f"event_batch ({cfg.event_batch})")
+        return _one_event_delta
+    if cfg.engine == "batch":
+        return _one_batch
+    return functools.partial(_one_batch_sharded, mesh=mesh)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "num_events", "mesh"))
+def _run_events(problem: MTLProblem, cfg: AMTLConfig, state,
+                delay_offsets: Array, num_events: int, mesh=None):
+    """Advance any engine state by `num_events` activations (jitted).
+
+    Module-level so the compile cache is shared across every AMTLEngine
+    built for the same (cfg, mesh, num_events) — `make_engine` is cheap to
+    call repeatedly.
+    """
+    step = _step_fn(cfg, mesh)
+    per_step = cfg.event_batch if cfg.engine in ("batch", "sharded") else 1
+    return jax.lax.fori_loop(
+        0, num_events // per_step,
+        lambda _, s: step(problem, cfg, delay_offsets, s), state)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _iterate_metrics(problem: MTLProblem, cfg: AMTLConfig, v: Array):
+    """(W, objective, BF residual) of the current iterate V."""
+    w = backward(problem, v, cfg.eta)
+    return w, problem.objective(w), fixed_point_residual(problem, v, cfg.eta)
+
+
+class AMTLEngine(NamedTuple):
+    """A resumable AMTL session: pure jittable functions over an engine
+    state (the public stepwise API; `make_engine` builds one).
+
+    init(v0, key) -> state
+        Fresh engine state for a (d, T) initial iterate and a PRNG key.
+    run(state, delay_offsets, num_events) -> state
+        Advance the session by `num_events` activations (jitted; one
+        compile per distinct num_events).  `delay_offsets` may be None
+        (all-zero mean staleness).  num_events must be a multiple of
+        `events_per_step`; run composes bitwise across any such split,
+        and a state that round-tripped through `repro.checkpoint`
+        resumes bitwise.
+    iterate(state) -> V
+        The newest (d, T) iterate held by the state (any engine).
+    events_per_step
+        Step granularity: `event_batch` for the batch/sharded engines,
+        1 for dense/delta.
+    """
+    init: Callable[[Array, Array], Any]
+    run: Callable[[Any, Array | None, int], Any]
+    iterate: Callable[[Any], Array]
+    events_per_step: int
+
+
+def make_engine(problem: MTLProblem, cfg: AMTLConfig,
+                mesh=None) -> AMTLEngine:
+    """Build the resumable session engine for `cfg` (the public API).
+
+    `mesh` (engine='sharded' only) is the 1-D "tasks" mesh to partition
+    the task columns over; default is all visible devices
+    (`make_task_mesh`).  Validation runs here, eagerly — `run` never
+    raises on a well-formed event count.
+    """
+    validate_config(cfg, problem.reg_name)
+    mesh, n_shards = _resolve_mesh(problem, cfg, mesh)
+    num_tasks = problem.num_tasks
+    per_step = cfg.event_batch if cfg.engine in ("batch", "sharded") else 1
+
+    def init(v0: Array, key: Array):
+        if cfg.engine == "dense":
+            return init_state(cfg, v0, num_tasks, key)
+        if cfg.engine == "delta":
+            return init_delta_state(cfg, v0, num_tasks, key)
         if cfg.engine == "batch":
-            return (init_batch_state(cfg, v0, problem.num_tasks, key),
-                    _one_batch, cfg.event_batch)
-        if mesh is None:
-            from repro.launch.mesh import make_task_mesh
-            mesh = make_task_mesh()
-        if TASK_AXIS not in mesh.axis_names:
+            return init_batch_state(cfg, v0, num_tasks, key)
+        return init_sharded_state(cfg, v0, num_tasks, key, n_shards)
+
+    def run(state, delay_offsets, num_events: int):
+        if num_events % per_step != 0:
             raise ValueError(
-                f"engine='sharded' needs a mesh with a {TASK_AXIS!r} axis; "
-                f"got axes {mesh.axis_names}")
-        n_shards = mesh.shape[TASK_AXIS]
-        if problem.num_tasks % n_shards != 0:
-            raise ValueError(
-                f"num_tasks ({problem.num_tasks}) must be divisible by the "
-                f"{TASK_AXIS!r} mesh axis size ({n_shards})")
-        return (init_sharded_state(cfg, v0, problem.num_tasks, key,
-                                   n_shards),
-                functools.partial(_one_batch_sharded, mesh=mesh),
-                cfg.event_batch)
-    raise ValueError(f"unknown AMTL engine {cfg.engine!r}; "
-                     "expected 'delta', 'dense', 'batch', or 'sharded'")
+                f"num_events ({num_events}) must be a multiple of "
+                f"event_batch ({per_step}) for engine={cfg.engine!r}")
+        if delay_offsets is None:
+            delay_offsets = jnp.zeros((num_tasks,), jnp.float32)
+        return _run_events(problem, cfg, state, delay_offsets,
+                           int(num_events), mesh)
+
+    return AMTLEngine(init=init, run=run, iterate=current_iterate,
+                      events_per_step=per_step)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cfg", "num_epochs", "events_per_epoch",
-                                    "mesh"))
 def amtl_solve(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array,
                num_epochs: int, events_per_epoch: int | None = None,
                delay_offsets: Array | None = None, mesh=None) -> AMTLResult:
@@ -666,39 +830,36 @@ def amtl_solve(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array,
     expectation), matching the paper's per-iteration accounting ("every task
     node updates one forward step for each iteration").
 
+    Thin wrapper over the session API: each epoch is one `engine.run`
+    advance followed by the (full-SVD) objective/residual metric tail.
     `mesh` (engine='sharded' only) is the 1-D "tasks" mesh to partition the
     task columns over; default is all visible devices (`make_task_mesh`).
     """
-    num_tasks = problem.num_tasks
+    engine = make_engine(problem, cfg, mesh)
     if events_per_epoch is None:
-        events_per_epoch = num_tasks
-    if delay_offsets is None:
-        delay_offsets = jnp.zeros((num_tasks,), jnp.float32)
-
-    state0, step, per_step = _engine(problem, cfg, v0, key, mesh)
-    if events_per_epoch % per_step != 0:
+        events_per_epoch = problem.num_tasks
+    if events_per_epoch % engine.events_per_step != 0:
         raise ValueError(
             f"events_per_epoch ({events_per_epoch}) must be a multiple of "
-            f"event_batch ({per_step}) for engine={cfg.engine!r}")
+            f"event_batch ({engine.events_per_step}) for "
+            f"engine={cfg.engine!r}")
 
-    def epoch(state, _):
-        state = jax.lax.fori_loop(
-            0, events_per_epoch // per_step,
-            lambda _, s: step(problem, cfg, delay_offsets, s), state)
-        v = current_iterate(state)
-        w = backward(problem, v, cfg.eta)
-        obj = problem.objective(w)
-        from repro.core.operators import fixed_point_residual
-        res = fixed_point_residual(problem, v, cfg.eta)
-        return state, (obj, res)
+    state = engine.init(v0, key)
+    objs, ress, w = [], [], None
+    for _ in range(num_epochs):
+        state = engine.run(state, delay_offsets, events_per_epoch)
+        w, obj, res = _iterate_metrics(problem, cfg, engine.iterate(state))
+        objs.append(obj)
+        ress.append(res)
+    v = engine.iterate(state)
+    if w is None:                      # num_epochs == 0
+        w = _iterate_metrics(problem, cfg, v)[0]
+    empty = jnp.zeros((0,), jnp.float32)
+    return AMTLResult(v, w,
+                      jnp.stack(objs) if objs else empty,
+                      jnp.stack(ress) if ress else empty)
 
-    state, (objs, ress) = jax.lax.scan(epoch, state0, None, length=num_epochs)
-    v = current_iterate(state)
-    w = backward(problem, v, cfg.eta)
-    return AMTLResult(v, w, objs, ress)
 
-
-@functools.partial(jax.jit, static_argnames=("cfg", "num_events", "mesh"))
 def amtl_events_only(problem: MTLProblem, cfg: AMTLConfig, v0: Array,
                      key: Array, num_events: int,
                      delay_offsets: Array | None = None, mesh=None):
@@ -708,17 +869,10 @@ def amtl_events_only(problem: MTLProblem, cfg: AMTLConfig, v0: Array,
     BatchAMTLState, or ShardedAMTLState, matching `cfg.engine`).  This is
     the events/sec benchmark path: it isolates the per-event engine cost
     from the (full-SVD) objective/residual instrumentation of `amtl_solve`.
+    Thin wrapper over the session API (init + one `run`).
     """
-    if delay_offsets is None:
-        delay_offsets = jnp.zeros((problem.num_tasks,), jnp.float32)
-    state0, step, per_step = _engine(problem, cfg, v0, key, mesh)
-    if num_events % per_step != 0:
-        raise ValueError(
-            f"num_events ({num_events}) must be a multiple of event_batch "
-            f"({per_step}) for engine={cfg.engine!r}")
-    return jax.lax.fori_loop(
-        0, num_events // per_step,
-        lambda _, s: step(problem, cfg, delay_offsets, s), state0)
+    engine = make_engine(problem, cfg, mesh)
+    return engine.run(engine.init(v0, key), delay_offsets, num_events)
 
 
 def current_iterate(state) -> Array:
@@ -729,13 +883,27 @@ def current_iterate(state) -> Array:
 
 
 def default_config(problem: MTLProblem, tau: int = 4, c: float = 0.9,
-                   dynamic_step: bool = False,
-                   safety: float = 1.0) -> AMTLConfig:
-    """Step sizes from Theorem 1: eta < 2/L, eta_k <= c/(2 tau/sqrt(T)+1)."""
+                   dynamic_step: bool = False, safety: float = 1.0, *,
+                   engine: str = "delta", prox_every: int = 1,
+                   prox_rank: int | None = None,
+                   event_batch: int = 1) -> AMTLConfig:
+    """Step sizes from Theorem 1: eta < 2/L, eta_k <= c/(2 tau/sqrt(T)+1).
+
+    Engine-selection kwargs (`engine`, `prox_every`, `prox_rank`,
+    `event_batch`) go through `validate_config` — the same path
+    `make_engine` runs — so an invalid combination fails here, not at the
+    first solve.
+    """
     lip = problem.lipschitz()
-    return AMTLConfig(
+    cfg = AMTLConfig(
         eta=safety / lip,
         eta_k=amtl_max_step(tau, problem.num_tasks, c),
         tau=tau,
         dynamic_step=dynamic_step,
+        engine=engine,
+        prox_every=prox_every,
+        prox_rank=prox_rank,
+        event_batch=event_batch,
     )
+    validate_config(cfg, problem.reg_name)
+    return cfg

@@ -122,11 +122,19 @@ def test_one_event_engines_reject_event_batch(small_problem, engine):
 
 
 def test_batch_requires_prox_alignment(small_problem):
+    """prox_every may exceed event_batch (decoupled cadence) but must land
+    on batch boundaries: non-multiples are rejected."""
     w0 = jnp.zeros((small_problem.dim, small_problem.num_tasks), jnp.float32)
-    with pytest.raises(ValueError,
-                       match=r"prox_every \(2\) must equal event_batch \(4\)"):
+    err = r"prox_every \(2\) must be a multiple of event_batch \(4\)"
+    with pytest.raises(ValueError, match=err):
         amtl_solve(small_problem,
                    _base_cfg(small_problem, engine="batch", prox_every=2,
+                             event_batch=4),
+                   w0, jax.random.PRNGKey(0), num_epochs=1)
+    with pytest.raises(ValueError,
+                       match=r"prox_every \(6\) must be a multiple"):
+        amtl_solve(small_problem,
+                   _base_cfg(small_problem, engine="batch", prox_every=6,
                              event_batch=4),
                    w0, jax.random.PRNGKey(0), num_epochs=1)
 

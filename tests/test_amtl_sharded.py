@@ -163,7 +163,8 @@ def test_sharded_requires_prox_alignment(small_problem, mesh1):
     cfg = AMTLConfig(eta=eta, eta_k=0.7, tau=3, engine="sharded",
                      prox_every=2, event_batch=4)
     with pytest.raises(ValueError,
-                       match=r"prox_every \(2\) must equal event_batch \(4\)"):
+                       match=r"prox_every \(2\) must be a multiple of "
+                             r"event_batch \(4\)"):
         amtl_solve(small_problem, cfg, w0, jax.random.PRNGKey(0),
                    num_epochs=1, events_per_epoch=4, mesh=mesh1)
 

@@ -1,5 +1,4 @@
-"""Property-based test of the batched event sampler's serial-replay
-contract.
+"""Property-based tests of the serial-replay contracts.
 
 `_sample_activation_batch` is what lets the batch and sharded engines claim
 an event stream identical to the one-event engines BY CONSTRUCTION: it must
@@ -9,6 +8,14 @@ per-position staleness clamp `nu <= min(tau, event + i)` — for every
 `event_batch`, `tau`, `delay_offsets`, jitter, and chain position.  PR 2
 only covered this implicitly at the fixed bench shapes; here hypothesis
 drives arbitrary configurations.
+
+The session analogue (PR 4): `AMTLEngine.run` must compose bitwise at ANY
+step boundary — `run(·, total)` equals `run(run(·, n), total - n)` on the
+FULL engine state, for arbitrary engine, tau, event_batch, prox cadence,
+and split point, with the mid state additionally round-tripped through the
+checkpoint serialization (host numpy and back).  This is the streaming
+deployment contract: a server that persists its state after any chunk of
+events and restarts resumes the exact event stream.
 """
 import numpy as np
 import pytest
@@ -19,7 +26,8 @@ import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from repro.core.amtl import (AMTLConfig, _sample_activation,
-                             _sample_activation_batch)
+                             _sample_activation_batch, make_engine)
+from repro.core.losses import MTLProblem
 
 
 @st.composite
@@ -66,3 +74,74 @@ def test_batch_sampler_replays_serial_chain_exactly(setup):
     # staleness always within the cap and the warm-up window
     assert all(nu <= min(tau, event0 + i)
                for i, nu in enumerate(want_nus))
+
+
+# ------------------------------------------------- session split / resume
+
+_T, _N, _D = 4, 6, 8
+
+
+def _tiny_problem():
+    kx, ky = jax.random.split(jax.random.PRNGKey(0))
+    xs = jax.random.normal(kx, (_T, _N, _D)) / np.sqrt(_D)
+    ys = jax.random.normal(ky, (_T, _N))
+    return MTLProblem(xs, ys, "lstsq", "nuclear", 0.1)
+
+
+@st.composite
+def _session_setups(draw):
+    engine = draw(st.sampled_from(["dense", "delta", "batch", "sharded"]))
+    tau = draw(st.integers(0, 4))
+    if engine in ("batch", "sharded"):
+        bsz = draw(st.integers(1, 4))
+        prox_every = bsz * draw(st.integers(1, 3))   # incl. decoupled k > 1
+    else:
+        bsz = 1
+        prox_every = 1 if engine == "dense" else draw(st.integers(1, 4))
+    total_steps = draw(st.integers(1, 5))
+    split = draw(st.integers(0, total_steps))
+    dynamic = draw(st.booleans())
+    offsets = draw(st.lists(
+        st.floats(0.0, 4.0, allow_nan=False, allow_infinity=False),
+        min_size=_T, max_size=_T))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return engine, tau, bsz, prox_every, total_steps, split, dynamic, \
+        offsets, seed
+
+
+def _roundtrip_host(state):
+    """The checkpoint serialization boundary: every leaf to host numpy and
+    back (what save -> restore does, minus the filesystem)."""
+    return jax.tree.map(lambda a: jnp.asarray(np.asarray(a)), state)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_session_setups())
+def test_session_split_at_any_event_boundary_resumes_bitwise(setup):
+    """The streaming analogue of the serial-chain replay property: for any
+    engine/tau/event_batch/cadence and ANY split point, running the session
+    in two chunks (with a host round-trip of the mid state) reproduces the
+    uninterrupted run's full state bitwise."""
+    (engine, tau, bsz, prox_every, total_steps, split, dynamic, offsets,
+     seed) = setup
+    problem = _tiny_problem()
+    cfg = AMTLConfig(eta=1.0 / problem.lipschitz(), eta_k=0.6, tau=tau,
+                     engine=engine, event_batch=bsz, prox_every=prox_every,
+                     dynamic_step=dynamic)
+    mesh = None
+    if engine == "sharded":
+        from repro.launch.mesh import make_task_mesh
+        mesh = make_task_mesh(1)
+    eng = make_engine(problem, cfg, mesh)
+    offs = jnp.asarray(offsets, jnp.float32)
+    w0 = jnp.zeros((_D, _T), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+
+    full = eng.run(eng.init(w0, key), offs, total_steps * bsz)
+    mid = eng.run(eng.init(w0, key), offs, split * bsz)
+    resumed = eng.run(_roundtrip_host(mid), offs, (total_steps - split) * bsz)
+
+    assert int(resumed.event) == total_steps * bsz
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(resumed),
+                    strict=True):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
