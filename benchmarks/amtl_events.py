@@ -25,14 +25,24 @@ four batches through the carried (d, T) prox cache;
 `speedup.batch_k4_over_batch` quantifies what the cadence decoupling buys
 on top of per-batch refreshes.  The `sharded` row runs the batch
 configuration with the T task columns partitioned over ALL visible devices
-(`config.task_shards`; CI forces 8 fake host devices) — one all_gather +
-replicated prox per batch, shard-local column updates.  On fake host
-devices the replicated prox multiplies total CPU work, so
+(`config.task_shards`; CI forces 8 fake host devices) and the production
+`prox_mode="distributed"` server prox — each shard sketches only its own
+column block (one (d, p) psum), the projected core is assembled with a
+small (p, T/n) all_gather, and the thresholded reconstruction stays
+shard-local.  A `sharded_repl` row keeps the PR-3 replicated prox (one
+(d, T) all_gather, identical SVT on every shard) so
+`speedup.distprox_over_sharded` tracks what distributing the prox buys;
+every engine row records its `prox_mode` and `comm_bytes_per_refresh`
+(collective payload per prox refresh: 0 for the single-device engines,
+d*T*4 for the replicated gather, (d*p + p*T)*4 for the distributed
+sketch).  On fake host devices all shards share one CPU, so
 `speedup.sharded_over_batch` measures collective/masking overhead there,
-not real multi-chip scaling; the row exists to track that overhead across
-PRs.  Engine equivalence (bitwise, aligned configs) is covered by
-tests/test_amtl_delta.py, tests/test_amtl_batch.py, and
-tests/test_amtl_sharded.py, not timed here.
+not real multi-chip scaling — but `distprox_over_sharded` is meaningful
+even there: the replicated prox DUPLICATES the sketch on every shard
+while the distributed prox divides it, so killing that duplication shows
+up as wall-clock even on a shared CPU.  Engine equivalence (bitwise,
+aligned configs) is covered by tests/test_amtl_delta.py,
+tests/test_amtl_batch.py, and tests/test_amtl_sharded.py, not timed here.
 """
 from __future__ import annotations
 
@@ -46,6 +56,8 @@ import numpy as np
 from benchmarks.common import Row
 from repro.core import AMTLConfig, MTLProblem, amtl_max_step
 from repro.core.amtl import amtl_events_only
+from repro.core.prox import ProxPlan
+from repro.distributed.sharding import TASK_AXIS
 
 D, T, TAU = 8192, 128, 8
 N_SAMPLES = 4          # tiny per-task n: the engines, not the grads, dominate
@@ -83,6 +95,22 @@ def _events_per_sec(problem: MTLProblem, cfg: AMTLConfig, events: int,
     return events / best
 
 
+def _comm_bytes_per_refresh(cfg: AMTLConfig, task_shards: int) -> int:
+    """Collective payload of ONE server-prox refresh (f32 bytes).
+
+    Single-device engines pay nothing.  The sharded replicated prox
+    all_gathers the (d, T) stale iterate; the rank-distributed prox moves
+    a (d, p) psum partial plus the gathered (p, T) projected core.
+    """
+    if cfg.engine != "sharded":
+        return 0
+    if cfg.prox_mode == "distributed":
+        plan = ProxPlan(axis=TASK_AXIS, num_tasks=T,
+                        n_local=T // task_shards)
+        return plan.comm_bytes_per_refresh(D, cfg.prox_rank)
+    return D * T * 4
+
+
 def _state_bytes(cfg: AMTLConfig, task_shards: int = 1) -> dict:
     itemsize = 4  # f32
     if cfg.engine == "dense":
@@ -105,7 +133,10 @@ def _state_bytes(cfg: AMTLConfig, task_shards: int = 1) -> dict:
     return {"ring_bytes": ring, "state_bytes": total}
 
 
-def run() -> list[Row]:
+def run(repeats: int = 3) -> list[Row]:
+    """`repeats` timed reps per row (best-of; first run compiles/warms).
+    The ROADMAP's ±25% machine-noise caveat on absolute rows is
+    controllable from CI via `benchmarks.run --repeats N`."""
     problem = _problem()
     eta_k = amtl_max_step(TAU, T)
     dense_cfg = AMTLConfig(eta=0.05, eta_k=eta_k, tau=TAU, engine="dense")
@@ -120,21 +151,29 @@ def run() -> list[Row]:
     batch_k4_cfg = batch_cfg._replace(prox_every=PROX_K * EVENT_BATCH)
 
     # task-sharded engine: batch config over all visible devices (T=128 is
-    # divisible by any power-of-two host-device count CI uses)
+    # divisible by any power-of-two host-device count CI uses), production
+    # rank-distributed server prox; the _repl row keeps the replicated
+    # prox so its duplication cost stays tracked across PRs.
     task_shards = jax.local_device_count()
     from repro.launch.mesh import make_task_mesh
     mesh = make_task_mesh(task_shards)
     sharded_cfg = AMTLConfig(eta=0.05, eta_k=eta_k, tau=TAU,
                              engine="sharded", prox_every=EVENT_BATCH,
-                             event_batch=EVENT_BATCH, prox_rank=PROX_RANK)
+                             event_batch=EVENT_BATCH, prox_rank=PROX_RANK,
+                             prox_mode="distributed")
+    sharded_repl_cfg = sharded_cfg._replace(prox_mode="replicated")
 
-    dense_eps = _events_per_sec(problem, dense_cfg, DENSE_EVENTS)
-    delta_eps = _events_per_sec(problem, delta_cfg, DELTA_EVENTS)
-    matched_eps = _events_per_sec(problem, delta_matched_cfg, BATCH_EVENTS)
-    batch_eps = _events_per_sec(problem, batch_cfg, BATCH_EVENTS)
-    batch_k4_eps = _events_per_sec(problem, batch_k4_cfg, BATCH_EVENTS)
+    dense_eps = _events_per_sec(problem, dense_cfg, DENSE_EVENTS, repeats)
+    delta_eps = _events_per_sec(problem, delta_cfg, DELTA_EVENTS, repeats)
+    matched_eps = _events_per_sec(problem, delta_matched_cfg, BATCH_EVENTS,
+                                  repeats)
+    batch_eps = _events_per_sec(problem, batch_cfg, BATCH_EVENTS, repeats)
+    batch_k4_eps = _events_per_sec(problem, batch_k4_cfg, BATCH_EVENTS,
+                                   repeats)
     sharded_eps = _events_per_sec(problem, sharded_cfg, BATCH_EVENTS,
-                                  mesh=mesh)
+                                  repeats, mesh=mesh)
+    sharded_repl_eps = _events_per_sec(problem, sharded_repl_cfg,
+                                       BATCH_EVENTS, repeats, mesh=mesh)
     dense_mem = _state_bytes(dense_cfg)
     delta_mem = _state_bytes(delta_cfg)
     batch_mem = _state_bytes(batch_cfg)
@@ -147,7 +186,14 @@ def run() -> list[Row]:
         "batch_over_delta_matched": batch_eps / max(matched_eps, 1e-12),
         "batch_k4_over_batch": batch_k4_eps / max(batch_eps, 1e-12),
         "sharded_over_batch": sharded_eps / max(batch_eps, 1e-12),
+        "distprox_over_sharded": sharded_eps / max(sharded_repl_eps, 1e-12),
     }
+
+    def _row(cfg: AMTLConfig, eps: float, mem: dict) -> dict:
+        return {"events_per_sec": eps, "us_per_event": 1e6 / eps,
+                "prox_mode": cfg.prox_mode,
+                "comm_bytes_per_refresh": _comm_bytes_per_refresh(
+                    cfg, task_shards), **mem}
 
     report = {
         # prox_every is the delta row's cadence; the batch, delta_matched,
@@ -158,19 +204,17 @@ def run() -> list[Row]:
                    "event_batch": EVENT_BATCH, "prox_k": PROX_K,
                    "task_shards": task_shards,
                    "backend": jax.default_backend()},
-        "dense": {"events_per_sec": dense_eps,
-                  "us_per_event": 1e6 / dense_eps, **dense_mem},
-        "delta": {"events_per_sec": delta_eps,
-                  "us_per_event": 1e6 / delta_eps, **delta_mem},
-        "delta_matched": {"events_per_sec": matched_eps,
-                          "us_per_event": 1e6 / matched_eps, **delta_mem},
-        "batch": {"events_per_sec": batch_eps,
-                  "us_per_event": 1e6 / batch_eps, **batch_mem},
+        "dense": _row(dense_cfg, dense_eps, dense_mem),
+        "delta": _row(delta_cfg, delta_eps, delta_mem),
+        "delta_matched": _row(delta_matched_cfg, matched_eps, delta_mem),
+        "batch": _row(batch_cfg, batch_eps, batch_mem),
         # prox cadence PROX_K * event_batch (the decoupled session cadence)
-        "batch_k4": {"events_per_sec": batch_k4_eps,
-                     "us_per_event": 1e6 / batch_k4_eps, **batch_k4_mem},
-        "sharded": {"events_per_sec": sharded_eps,
-                    "us_per_event": 1e6 / sharded_eps, **sharded_mem},
+        "batch_k4": _row(batch_k4_cfg, batch_k4_eps, batch_k4_mem),
+        # production sharded config: rank-distributed server prox
+        "sharded": _row(sharded_cfg, sharded_eps, sharded_mem),
+        # PR-3 replicated prox, kept as the distprox_over_sharded baseline
+        "sharded_repl": _row(sharded_repl_cfg, sharded_repl_eps,
+                             sharded_mem),
         "speedup": speedup,
         # kept for cross-PR continuity with the PR-1 schema
         "speedup_events_per_sec": speedup["delta_over_dense"],
@@ -198,7 +242,14 @@ def run() -> list[Row]:
             f"vs_batch={speedup['batch_k4_over_batch']:.2f}x"),
         Row("amtl_events/sharded", 1e6 / sharded_eps,
             f"events/sec={sharded_eps:.2f} shards={task_shards} "
-            f"vs_batch={speedup['sharded_over_batch']:.2f}x"),
+            f"prox=distributed "
+            f"vs_batch={speedup['sharded_over_batch']:.2f}x "
+            f"vs_repl={speedup['distprox_over_sharded']:.2f}x"),
+        Row("amtl_events/sharded_repl", 1e6 / sharded_repl_eps,
+            f"events/sec={sharded_repl_eps:.2f} shards={task_shards} "
+            f"prox=replicated "
+            f"comm={report['sharded_repl']['comm_bytes_per_refresh']}B "
+            f"vs_dist_comm={report['sharded']['comm_bytes_per_refresh']}B"),
         Row("amtl_events/ring_memory", 0.0,
             f"dense={dense_mem['ring_bytes']}B delta={delta_mem['ring_bytes']}B "
             f"ratio={report['ring_memory_ratio']:.0f}x"),

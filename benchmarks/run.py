@@ -17,7 +17,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed reps per amtl_events row (best-of; the "
+                         "±25%% machine-noise caveat in ROADMAP shrinks "
+                         "with more reps — raise on noisy CI runners)")
     args = ap.parse_args()
+    if args.repeats < 1:
+        ap.error("--repeats must be >= 1")
+
+    import functools
 
     from benchmarks import (amtl_events, fig3_scaling, fig4_convergence,
                             kernels_bench, sgd_amtl, table1_timing,
@@ -30,7 +38,8 @@ def main() -> None:
         "table456": table456_dynamic_step.run,
         "sgd_amtl": sgd_amtl.run,
         "kernels": kernels_bench.run,
-        "amtl_events": amtl_events.run,
+        "amtl_events": functools.partial(amtl_events.run,
+                                         repeats=args.repeats),
     }
     names = args.only.split(",") if args.only else list(suites)
 

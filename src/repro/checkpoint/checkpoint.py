@@ -33,12 +33,33 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     return out
 
 
-def save(ckpt_dir: str, step: int, tree: Any) -> str:
+def save(ckpt_dir: str, step: int, tree: Any,
+         keep_last: Optional[int] = None) -> str:
+    """Write `tree` as `step_<step>.npz`; optionally rotate old steps.
+
+    `keep_last=k` deletes `step_*.npz` records beyond the k newest (by
+    step number) AFTER the write lands — a failed save never eats
+    existing checkpoints, and the record just written is never rotated
+    away (so the returned path always exists on return, even when an
+    out-of-order re-save of an old step falls outside the retention
+    window).  The default (None) keeps everything, unchanged from the
+    historical behaviour; long sharded sessions pass k to bound disk
+    growth.  Only `step_*.npz` files are ever touched.
+    """
+    if keep_last is not None and keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1 (got {keep_last}); "
+                         "use keep_last=None to keep every checkpoint")
     os.makedirs(ckpt_dir, exist_ok=True)
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     tmp = path + ".tmp.npz"
     np.savez(tmp, **_flatten(tree))
     os.replace(tmp, path)
+    if keep_last is not None:
+        steps = sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                       if (m := re.match(r"step_(\d+)\.npz$", f)))
+        for old in steps[:-keep_last]:
+            if old != step:
+                os.remove(os.path.join(ckpt_dir, f"step_{old:08d}.npz"))
     return path
 
 

@@ -9,7 +9,9 @@ from repro.core.operators import (amtl_max_step, backward, backward_forward,
                                   forward_backward, km_block_update, km_step,
                                   rollback_columns, rollback_columns_batch,
                                   rollback_columns_shard)
-from repro.core.prox import apply_prox, get_regularizer
+from repro.core.prox import (ProxPlan, apply_prox, get_regularizer,
+                             sketch_width, svt_randomized,
+                             svt_randomized_dist)
 from repro.core.simulator import (NetworkModel, SimProblem, SimResult,
                                   make_synthetic, simulate_amtl,
                                   simulate_smtl)
@@ -23,6 +25,7 @@ __all__ = [
     "DelayHistory", "dynamic_multiplier", "MTLProblem", "get_loss",
     "amtl_max_step", "backward", "backward_forward", "fixed_point_residual",
     "forward", "forward_backward", "km_block_update", "km_step",
+    "ProxPlan", "sketch_width", "svt_randomized", "svt_randomized_dist",
     "apply_prox", "get_regularizer", "NetworkModel", "SimProblem",
     "SimResult", "make_synthetic", "simulate_amtl", "simulate_smtl",
     "fista_solve", "reference_optimum", "smtl_solve",

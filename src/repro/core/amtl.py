@@ -62,12 +62,19 @@ Four engines implement the same mathematics:
       Every shard replays the FULL serial PRNG chain and masks events to
       their owner, so the (task, staleness) event stream is invariant to
       shard count by construction.  Collectives are paid only at prox
-      cadence — one `all_gather` per prox refresh assembles the stale
-      iterate for the server prox (SVT / randomized SVT), whose replicated
-      result is the broadcast back; gradients, column updates, and ring
-      writes stay shard-local.  With the decoupled cadence (`prox_every =
-      k * event_batch`) the all_gather is paid only every k batches — the
-      true "communication only at prox cadence" limit.  This is exactly the paper's server/worker communication
+      cadence.  With prox_mode="replicated", one `all_gather` per refresh
+      assembles the stale iterate for the server prox (SVT / randomized
+      SVT), whose replicated result is the broadcast back; with
+      prox_mode="distributed" (prox_rank required) the refresh is the
+      rank-distributed randomized SVT — a (d, p) `psum` of per-shard
+      sketch partials plus a (p, T/n) `all_gather` of the projected core,
+      the thresholded reconstruction applied shard-locally — cutting
+      per-refresh communication from O(d*T) to O(d*p + p*T) and dividing
+      the sketch flops over the shards.  Gradients, column updates, and
+      ring writes stay shard-local in both modes.  With the decoupled
+      cadence (`prox_every = k * event_batch`) the collectives are paid
+      only every k batches — the true "communication only at prox cadence"
+      limit.  This is exactly the paper's server/worker communication
       pattern: task nodes hold their data locally, the central server runs
       the prox.  On a 1-device mesh the engine reproduces engine="batch"
       bitwise on the CPU oracle path, and per-shard `delay_offsets` skews
@@ -109,9 +116,9 @@ from repro.core.operators import (amtl_max_step, backward,
                                   fixed_point_residual, km_block_update,
                                   rollback_columns, rollback_columns_batch,
                                   rollback_columns_shard)
-from repro.core.prox import svt_randomized
-from repro.distributed.sharding import (TASK_AXIS, shard_map_compat,
-                                        task_shard_specs)
+from repro.core.prox import ProxPlan, svt_randomized, svt_randomized_dist
+from repro.distributed.sharding import (TASK_AXIS, prox_cache_spec,
+                                        shard_map_compat, task_shard_specs)
 
 Array = jax.Array
 
@@ -144,6 +151,18 @@ class AMTLConfig(NamedTuple):
     prox_rank: int | None = None
     # engine="batch"/"sharded" only: activations applied per loop step.
     event_batch: int = 1
+    # engine="sharded" only: how the server prox is executed at a refresh.
+    # "replicated": ONE all_gather assembles the (d, T) stale iterate and
+    #   every shard runs the same SVT / randomized SVT on it (the
+    #   replicated result is the broadcast back) — O(d*T) communication
+    #   and the prox work duplicated n_shards times.
+    # "distributed" (requires prox_rank): the rank-distributed randomized
+    #   SVT — each shard sketches only its own (d, T/n) column block (one
+    #   (d, p) psum), the projected core is assembled with a (p, T/n)
+    #   all_gather, and the thresholded reconstruction is applied
+    #   shard-locally: O(d*p + p*T) communication, sketch flops divided
+    #   by the shard count, no shard ever holds the full iterate.
+    prox_mode: str = "replicated"
 
 
 class AMTLState(NamedTuple):
@@ -521,16 +540,24 @@ def _one_batch(problem: MTLProblem, cfg: AMTLConfig, delay_offsets: Array,
     )
 
 
-def _sharded_state_specs(axis: str = TASK_AXIS) -> ShardedAMTLState:
-    """PartitionSpec tree mirroring ShardedAMTLState's placement classes."""
+def _sharded_state_specs(cfg: AMTLConfig,
+                         axis: str = TASK_AXIS) -> ShardedAMTLState:
+    """PartitionSpec tree mirroring ShardedAMTLState's placement classes.
+
+    The prox cache is the one cfg-dependent placement: replicated for the
+    broadcast-back replicated prox, column-sharded like the iterate when
+    the rank-distributed prox carries its shard-local reconstruction
+    across decoupled-cadence batches (see `prox_cache_spec`).
+    """
     sp = task_shard_specs(axis)
+    carried = cfg.prox_every > cfg.event_batch
     return ShardedAMTLState(
         v=sp["columns"],
         delta_ring=sp["per_shard"],
         task_ring=sp["replicated"],
         ptr=sp["replicated"],
         event=sp["replicated"],
-        p_cache=sp["replicated"],
+        p_cache=prox_cache_spec(cfg.prox_mode, carried, axis),
         history=DelayHistory(buf=sp["per_task"], count=sp["per_task"]),
         key=sp["replicated"],
     )
@@ -543,12 +570,20 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
 
     Communication schedule — the paper's server/worker pattern, collectives
     only at prox cadence: each shard reconstructs the stale bits of ITS
-    columns from its private undo ring, ONE `all_gather` per prox refresh
-    (every k-th batch under the decoupled cadence prox_every =
-    k*event_batch) assembles the (d, T) stale iterate, every shard runs
-    the same server prox on it (the replicated result is the broadcast
-    back, carried in the replicated prox cache between refreshes), and
-    gradients, column updates, and ring writes stay shard-local.
+    columns from its private undo ring, then per refresh (every k-th batch
+    under the decoupled cadence prox_every = k*event_batch) either
+
+      prox_mode="replicated": ONE `all_gather` assembles the (d, T) stale
+        iterate and every shard runs the same server prox on it (the
+        replicated result is the broadcast back, carried in the replicated
+        prox cache between refreshes), or
+      prox_mode="distributed": the rank-distributed randomized SVT
+        (`svt_randomized_dist`) — one (d, p) `psum` of partial sketches +
+        one (p, T/n) `all_gather` of projected-core blocks, thresholded
+        reconstruction shard-local, cache column-sharded — O(d*p + p*T)
+        bytes instead of O(d*T) and the sketch flops divided over shards;
+
+    gradients, column updates, and ring writes stay shard-local either way.
 
     Every shard replays the full serial PRNG chain and masks events to
     their owner (sentinel column ids drop foreign events inside the batch
@@ -567,6 +602,8 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
     depth = cfg.tau + 1
     bsz = cfg.event_batch
     use_randomized = cfg.prox_rank is not None and problem.reg_name == "nuclear"
+    distributed = cfg.prox_mode == "distributed"
+    plan = ProxPlan(axis=axis, num_tasks=num_tasks, n_local=n_local)
 
     def local_step(xs, ys, offs, st):
         problem_l = MTLProblem(xs, ys, problem.loss_name, problem.reg_name,
@@ -577,16 +614,23 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
         k_prox = jax.random.fold_in(st.key, 7) if use_randomized else None
         key, ts, nus = _sample_activation_batch(cfg, offs, st.key,
                                                 num_tasks, st.event, bsz)
+        lts, owned = shard_local_tasks(ts, t_off, n_local)
+        lts_clamped = jnp.where(owned, lts, 0)
         v = st.v                                   # (d, n_local)
         ring = st.delta_ring[0]                    # (depth, d) private ring
 
         # Shard-local stale reconstruction at the batch's first event, then
-        # patch that event's column current on its owner shard.  The ONE
-        # collective: assemble the global stale iterate for the server
-        # prox; the prox result is replicated (= broadcast).  With the
-        # decoupled cadence this whole branch — all_gather included — runs
-        # only at every k-th batch; the predicate is replicated, so every
-        # shard takes the same branch and the collective stays SPMD-safe.
+        # patch that event's column current on its owner shard.  Then the
+        # refresh collectives, mode-dependent: replicated assembles the
+        # global stale iterate with ONE (d, T) all_gather and runs the
+        # identical server prox on every shard (result = broadcast);
+        # distributed hands the LOCAL stale block to the rank-distributed
+        # SVT, which psums a (d, p) sketch partial, gathers the (p, T/n)
+        # projected core, and reconstructs only this shard's columns.
+        # With the decoupled cadence this whole branch — collectives
+        # included — runs only at every k-th batch; the predicate is
+        # replicated, so every shard takes the same branch and the
+        # collectives stay SPMD-safe.
         def refresh(_):
             v_hat_loc = rollback_columns_shard(v, ring, st.task_ring,
                                                st.ptr, nus[0], cfg.tau,
@@ -595,12 +639,15 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
             own0 = (ts[0] >= t_off) & (ts[0] < t_off + n_local)
             v_hat_loc2 = v_hat_loc.at[:, c0].set(
                 jnp.where(own0, v[:, c0], v_hat_loc[:, c0]))
+            thresh = jnp.asarray(cfg.eta * problem.lam, v_hat_loc2.dtype)
+            if distributed:
+                return svt_randomized_dist(v_hat_loc2, thresh,
+                                           rank=cfg.prox_rank, key=k_prox,
+                                           plan=plan)
             v_hat = jax.lax.all_gather(v_hat_loc2, axis, axis=1, tiled=True)
             if use_randomized:
-                return svt_randomized(v_hat,
-                                      jnp.asarray(cfg.eta * problem.lam,
-                                                  v_hat.dtype),
-                                      rank=cfg.prox_rank, key=k_prox)
+                return svt_randomized(v_hat, thresh, rank=cfg.prox_rank,
+                                      key=k_prox)
             return backward(problem_l, v_hat, cfg.eta)
 
         if cfg.prox_every <= bsz:
@@ -611,9 +658,13 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
             p = jax.lax.cond(do_prox, refresh, lambda _: st.p_cache, None)
             p_cache = p
 
-        p_cols = p[:, ts]                                    # (d, bsz)
-        lts, owned = shard_local_tasks(ts, t_off, n_local)
-        lts_clamped = jnp.where(owned, lts, 0)
+        # Per-event prox columns.  The replicated prox yields the global
+        # (d, T) result, indexed by global task id; the distributed prox
+        # yields only this shard's (d, n_local) block, indexed by local
+        # column id (foreign events read the clamped column 0 — their
+        # whole pipeline is dropped at the scatter).  On the owner shard
+        # both index the same bits of the same reconstruction.
+        p_cols = p[:, lts_clamped] if distributed else p[:, ts]  # (d, bsz)
 
         # Forward-step gradients from the shard-local task data.  Foreign
         # events run on clamped inputs and are dropped at the scatter; the
@@ -656,7 +707,7 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
         )
 
     sp = task_shard_specs(axis)
-    state_specs = _sharded_state_specs(axis)
+    state_specs = _sharded_state_specs(cfg, axis)
     step = shard_map_compat(
         local_step, mesh=mesh,
         in_specs=(sp["per_task"], sp["per_task"], sp["replicated"],
@@ -701,6 +752,20 @@ def validate_config(cfg: AMTLConfig, reg_name: str | None = None) -> None:
             f"engine={cfg.engine!r} refreshes the server prox only at "
             f"batch boundaries, so prox_every ({cfg.prox_every}) must be a "
             f"multiple of event_batch ({cfg.event_batch})")
+    if cfg.prox_mode not in ("replicated", "distributed"):
+        raise ValueError(f"unknown prox_mode {cfg.prox_mode!r}; "
+                         "expected 'replicated' or 'distributed'")
+    if cfg.prox_mode == "distributed":
+        if cfg.engine != "sharded":
+            raise ValueError(
+                "prox_mode='distributed' is the sharded engine's "
+                "rank-distributed server prox; "
+                f"engine={cfg.engine!r} has no shards to distribute over")
+        if cfg.prox_rank is None:
+            raise ValueError(
+                "prox_mode='distributed' distributes the RANDOMIZED SVT "
+                "sketch, so prox_rank must be set (the exact dense SVD "
+                "has no column-separable decomposition to distribute)")
 
 
 def _resolve_mesh(problem: MTLProblem, cfg: AMTLConfig, mesh):
@@ -885,14 +950,14 @@ def current_iterate(state) -> Array:
 def default_config(problem: MTLProblem, tau: int = 4, c: float = 0.9,
                    dynamic_step: bool = False, safety: float = 1.0, *,
                    engine: str = "delta", prox_every: int = 1,
-                   prox_rank: int | None = None,
-                   event_batch: int = 1) -> AMTLConfig:
+                   prox_rank: int | None = None, event_batch: int = 1,
+                   prox_mode: str = "replicated") -> AMTLConfig:
     """Step sizes from Theorem 1: eta < 2/L, eta_k <= c/(2 tau/sqrt(T)+1).
 
     Engine-selection kwargs (`engine`, `prox_every`, `prox_rank`,
-    `event_batch`) go through `validate_config` — the same path
-    `make_engine` runs — so an invalid combination fails here, not at the
-    first solve.
+    `event_batch`, `prox_mode`) go through `validate_config` — the same
+    path `make_engine` runs — so an invalid combination fails here, not at
+    the first solve.
     """
     lip = problem.lipschitz()
     cfg = AMTLConfig(
@@ -904,6 +969,7 @@ def default_config(problem: MTLProblem, tau: int = 4, c: float = 0.9,
         prox_every=prox_every,
         prox_rank=prox_rank,
         event_batch=event_batch,
+        prox_mode=prox_mode,
     )
     validate_config(cfg, problem.reg_name)
     return cfg

@@ -54,6 +54,13 @@ def svt(w: Array, t: Array) -> Array:
     return (u * s[None, :] @ vt).astype(dtype)
 
 
+def sketch_width(rank: int, d: int, num_tasks: int) -> int:
+    """Columns of the Halko sketch: `rank` + oversampling, clipped to the
+    matrix.  One definition shared by the serial and distributed SVT (and
+    the bench's communication-volume accounting)."""
+    return min(rank + 8, min(d, num_tasks))
+
+
 def svt_randomized(w: Array, t: Array, *, rank: int, key: Array) -> Array:
     """Randomized SVT for very large (d x T): project to `rank` + oversampling.
 
@@ -62,15 +69,85 @@ def svt_randomized(w: Array, t: Array, *, rank: int, key: Array) -> Array:
     online-SVD concern, adapted: on TPU a small randomized sketch keeps the
     backward step MXU-friendly instead of sequential Brand updates).
     """
+    from repro.kernels.ops import svt_reconstruct
+
     d, T = w.shape
-    p = min(rank + 8, min(d, T))
+    p = sketch_width(rank, d, T)
     omega = jax.random.normal(key, (T, p), dtype=jnp.float32)
     y = w.astype(jnp.float32) @ omega                       # (d, p)
     q, _ = jnp.linalg.qr(y)                                  # (d, p)
     b = q.T @ w.astype(jnp.float32)                          # (p, T)
     ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
     s = jnp.maximum(s - t, 0.0)
-    return ((q @ ub) * s[None, :] @ vt).astype(w.dtype)
+    return svt_reconstruct(q @ ub, s, vt).astype(w.dtype)
+
+
+class ProxPlan(NamedTuple):
+    """Collective schedule of the rank-distributed randomized SVT.
+
+    The T task columns of the iterate live on a 1-D `axis` mesh
+    (`n_local = T / n_shards` columns per shard).  One refresh moves
+
+      psum        (d, p)        partial sketches  y = sum_s W_s @ Omega_s
+      all_gather  (p, n_local)  projected-core blocks  b_s = Q^T W_s
+
+    i.e. O(d*p + p*T) bytes instead of the O(d*T) iterate all_gather of
+    the replicated prox; the QR of the (d, p) sketch and the SVD of the
+    (p, T) core are cheap and replicated, the thresholded reconstruction
+    `(Q U) * sigma @ V^T_s` is shard-local.
+    """
+    axis: str          # mesh axis the task columns are sharded over
+    num_tasks: int     # global T
+    n_local: int       # T // n_shards columns owned per shard
+
+    def comm_bytes_per_refresh(self, d: int, rank: int,
+                               itemsize: int = 4) -> int:
+        """Collective payload per refresh: the (d, p) psum'd partial plus
+        the gathered (p, T) projected core."""
+        p = sketch_width(rank, d, self.num_tasks)
+        return (d * p + p * self.num_tasks) * itemsize
+
+
+def svt_randomized_dist(w_local: Array, t: Array, *, rank: int, key: Array,
+                        plan: ProxPlan) -> Array:
+    """Rank-distributed randomized SVT (inside shard_map over `plan.axis`).
+
+    `w_local` is this shard's (d, n_local) column block of the global
+    (d, T) iterate; the return is the thresholded reconstruction of the
+    SAME columns — no shard ever materializes the full iterate.  `key`
+    must be the replicated folded sketch key every shard holds, so the
+    (T, p) test matrix Omega is drawn with the serial `svt_randomized`'s
+    exact bits and partitioning its rows over shards makes the psum'd
+    sketch equal the serial contraction `W @ Omega`.
+
+    Equivalence contract: on a 1-shard mesh every collective degenerates
+    to the identity and each expression below is the serial path's, so the
+    result is bitwise `svt_randomized(w, t)` on the CPU oracle path.  At
+    n > 1 shards the psum regroups the sum over T (and hence Q, the core,
+    and the reconstruction) relative to the serial matmul, so agreement is
+    ulp-level, not bitwise — shard-count-invariance of the *engine* is
+    asserted at that tolerance (tests/test_amtl_sharded_multidevice.py).
+    """
+    from repro.kernels.ops import svt_reconstruct
+
+    d = w_local.shape[0]
+    p = sketch_width(rank, d, plan.num_tasks)
+    omega = jax.random.normal(key, (plan.num_tasks, p), dtype=jnp.float32)
+    t_off = jax.lax.axis_index(plan.axis) * plan.n_local
+    omega_loc = jax.lax.dynamic_slice_in_dim(omega, t_off, plan.n_local, 0)
+    # y = sum_s W_s @ Omega_s — ONE (d, p) psum; each shard's sketch flops
+    # drop from O(d*T*p) to O(d*T*p / n_shards).
+    y = jax.lax.psum(w_local.astype(jnp.float32) @ omega_loc, plan.axis)
+    q, _ = jnp.linalg.qr(y)                                  # replicated
+    b_loc = q.T @ w_local.astype(jnp.float32)                # (p, n_local)
+    # Assemble the projected core with a tiny (p, n_local) all_gather; the
+    # per-column contraction over d is shard-local, so given Q the gathered
+    # core carries the serial `Q^T W` bits.
+    b = jax.lax.all_gather(b_loc, plan.axis, axis=1, tiled=True)
+    ub, s, vt = jnp.linalg.svd(b, full_matrices=False)       # replicated
+    s = jnp.maximum(s - t, 0.0)
+    vt_loc = jax.lax.dynamic_slice_in_dim(vt, t_off, plan.n_local, 1)
+    return svt_reconstruct(q @ ub, s, vt_loc).astype(w_local.dtype)
 
 
 # ---------------------------------------------------------------------------

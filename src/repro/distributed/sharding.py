@@ -66,6 +66,13 @@ def task_shard_specs(axis: str = TASK_AXIS) -> dict[str, P]:
       per_shard  — (n_shards, ...) leaves: each shard's private undo ring
       replicated — the serial PRNG chain state (key, ptr, event counter)
                    and the global-task-id ring every shard replays
+
+    The rank-distributed randomized SVT (prox_mode='distributed',
+    `prox.svt_randomized_dist`) adds no new placement class: its (d, p)
+    sketch partial is psum'd to replicated INSIDE shard_map, its (p,
+    n_local) projected-core block is gathered to replicated, and its
+    reconstruction — like the prox cache that carries it between decoupled
+    refreshes — is `columns` (see `prox_cache_spec`).
     """
     return {
         "per_task": P(axis),
@@ -73,6 +80,24 @@ def task_shard_specs(axis: str = TASK_AXIS) -> dict[str, P]:
         "per_shard": P(axis),
         "replicated": P(),
     }
+
+
+def prox_cache_spec(prox_mode: str, carried: bool,
+                    axis: str = TASK_AXIS) -> P:
+    """Placement of the sharded engine's prox cache (`p_cache`).
+
+    The replicated prox broadcasts one (d, T) result to every shard, so
+    its cache is replicated.  The rank-distributed prox never materializes
+    the full result — each shard reconstructs only its own (d, n_local)
+    columns — so a CARRIED cache (decoupled cadence, prox_every >
+    event_batch) is column-sharded like the iterate.  At the aligned
+    cadence nothing is carried and the (0, 0) stub stays replicated in
+    either mode (sharding a 0-width stub buys nothing and the stub rides
+    the loop carry untouched).
+    """
+    if prox_mode == "distributed" and carried:
+        return P(None, axis)
+    return P()
 
 
 # leaf-name -> raw spec (for the *unstacked* trailing dims)

@@ -18,6 +18,8 @@ from repro.kernels.amtl_event_batch import \
 from repro.kernels.km_update import km_update as _km_pallas
 from repro.kernels.l21_prox import l21_prox as _l21_pallas
 from repro.kernels.lstsq_grad import lstsq_grad as _lstsq_pallas
+from repro.kernels.svt_reconstruct import \
+    svt_reconstruct as _svt_reconstruct_pallas
 
 Array = jax.Array
 
@@ -89,6 +91,25 @@ def amtl_event_batch_sharded(v_local: Array, p_cols: Array, g_cols: Array,
     return amtl_event_batch(v_local, p_cols, g_cols, local_tasks, eta,
                             eta_ks, use_pallas=use_pallas,
                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def svt_reconstruct(qu: Array, s: Array, vt: Array, *,
+                    use_pallas: bool | None = None,
+                    interpret: bool = False) -> Array:
+    """Thresholded low-rank SVT apply (QU * sigma) @ V^T: (d, m).
+
+    The tail of both `prox.svt_randomized` and the rank-distributed
+    `prox.svt_randomized_dist` — routing every randomized prox through the
+    same dispatch keeps the serial and distributed refreshes on identical
+    arithmetic per backend (the bitwise 1-shard contract on CPU; on TPU
+    both take the fused Pallas kernel, so they stay mutually consistent).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _svt_reconstruct_pallas(qu, s, vt, interpret=interpret)
+    return ref.svt_reconstruct_ref(qu, s, vt)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))

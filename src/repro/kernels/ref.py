@@ -114,6 +114,22 @@ def amtl_event_batch_ref(v: Array, p_cols: Array, g_cols: Array,
     return v.at[:, scatter_to].set(outs, mode="drop"), undos
 
 
+def svt_reconstruct_ref(qu: Array, s: Array, vt: Array) -> Array:
+    """Thresholded low-rank apply: (QU * sigma) @ V^T.
+
+    qu: (d, p) rotated range basis Q @ U_b; s: (p,) thresholded singular
+    values; vt: (p, m) right factor (m = T, or a shard's n_local column
+    block in the distributed prox).  Returns (d, m) in float32 cast back
+    to qu.dtype.  This expression IS the tail of `prox.svt_randomized` —
+    both the serial and the rank-distributed SVT route their
+    reconstruction through `ops.svt_reconstruct`, so the CPU oracle path
+    keeps them on identical bits.
+    """
+    qu32 = qu.astype(jnp.float32)
+    return ((qu32 * s.astype(jnp.float32)[None, :])
+            @ vt.astype(jnp.float32)).astype(qu.dtype)
+
+
 def l21_prox_ref(w: Array, t: Array) -> Array:
     """Row-group soft threshold: w^i * max(0, 1 - t/||w^i||)."""
     w32 = w.astype(jnp.float32)

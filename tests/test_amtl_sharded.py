@@ -15,6 +15,9 @@ from repro.core import AMTLConfig, amtl_solve
 from repro.core.amtl import amtl_events_only
 from repro.core.operators import (rollback_columns_batch,
                                   rollback_columns_shard)
+from repro.core.prox import (ProxPlan, sketch_width, svt_randomized,
+                             svt_randomized_dist)
+from repro.distributed.sharding import TASK_AXIS, shard_map_compat
 from repro.kernels.ops import amtl_event_batch, amtl_event_batch_sharded
 from repro.kernels.ref import shard_local_tasks
 from repro.launch.mesh import make_task_mesh
@@ -96,6 +99,82 @@ def test_sharded_state_stream_matches_batch(small_problem, mesh1):
                                   np.asarray(s.history.count))
 
 
+# ------------------------------------------- rank-distributed server prox
+def test_svt_randomized_dist_1shard_bitwise_matches_serial(mesh1):
+    """On a 1-shard mesh the psum and both gathers degenerate to the
+    identity, Omega is un-partitioned, and every expression in
+    `svt_randomized_dist` is the serial path's — so the distributed prox
+    must reproduce `svt_randomized` BITWISE on the CPU oracle path."""
+    d, T, rank = 24, 8, 4
+    w = jax.random.normal(jax.random.PRNGKey(0), (d, T), jnp.float32)
+    t = jnp.asarray(0.3, jnp.float32)
+    key = jax.random.PRNGKey(42)
+    plan = ProxPlan(axis=TASK_AXIS, num_tasks=T, n_local=T)
+    from jax.sharding import PartitionSpec as P
+    dist = shard_map_compat(
+        lambda w_loc: svt_randomized_dist(w_loc, t, rank=rank, key=key,
+                                          plan=plan),
+        mesh=mesh1, in_specs=(P(None, TASK_AXIS),),
+        out_specs=P(None, TASK_AXIS))
+    want = svt_randomized(w, t, rank=rank, key=key)
+    np.testing.assert_array_equal(np.asarray(dist(w)), np.asarray(want))
+
+
+@pytest.mark.parametrize("tau,bsz,k", [(3, 5, 1), (3, 4, 2), (0, 2, 3)])
+def test_sharded_distributed_prox_1shard_bitwise_matches_batch(
+        small_problem, mesh1, tau, bsz, k):
+    """engine='sharded' with prox_mode='distributed' on a 1-shard mesh must
+    reproduce the batch engine (replicated randomized prox) bitwise on the
+    CPU oracle path — full state including the (column-sharded) prox cache
+    at the decoupled cadence k > 1."""
+    batch_cfg, sharded_cfg = _cfg_pair(small_problem, tau, bsz, prox_rank=4)
+    batch_cfg = batch_cfg._replace(prox_every=k * bsz)
+    dist_cfg = sharded_cfg._replace(prox_every=k * bsz,
+                                    prox_mode="distributed")
+    w0 = jnp.zeros((small_problem.dim, small_problem.num_tasks), jnp.float32)
+    key = jax.random.PRNGKey(9)
+    n_events = 8 * bsz * k
+    b = amtl_events_only(small_problem, batch_cfg, w0, key, n_events)
+    s = amtl_events_only(small_problem, dist_cfg, w0, key, n_events,
+                         mesh=mesh1)
+    np.testing.assert_array_equal(np.asarray(b.v), np.asarray(s.v))
+    np.testing.assert_array_equal(np.asarray(b.p_cache),
+                                  np.asarray(s.p_cache))
+    np.testing.assert_array_equal(np.asarray(b.task_ring),
+                                  np.asarray(s.task_ring))
+    np.testing.assert_array_equal(np.asarray(b.key), np.asarray(s.key))
+    np.testing.assert_array_equal(np.asarray(b.delta_ring),
+                                  np.asarray(s.delta_ring[0]))
+
+
+def test_sharded_distributed_prox_dynamic_step_and_straggler_offsets(
+        small_problem, mesh1):
+    """Distributed prox composed with the delay-adaptive KM step and skewed
+    per-task delays: still bitwise vs the batch engine at 1 shard."""
+    batch_cfg, sharded_cfg = _cfg_pair(small_problem, tau=4, bsz=5,
+                                       dynamic_step=True, prox_rank=5)
+    dist_cfg = sharded_cfg._replace(prox_mode="distributed")
+    offsets = jnp.asarray([3.0, 1.0, 0.0, 2.0, 4.0])
+    w0 = jnp.zeros((small_problem.dim, small_problem.num_tasks), jnp.float32)
+    key = jax.random.PRNGKey(11)
+    batch = amtl_solve(small_problem, batch_cfg, w0, key, num_epochs=6,
+                       delay_offsets=offsets)
+    dist = amtl_solve(small_problem, dist_cfg, w0, key, num_epochs=6,
+                      delay_offsets=offsets, mesh=mesh1)
+    np.testing.assert_array_equal(np.asarray(batch.v), np.asarray(dist.v))
+
+
+def test_prox_plan_comm_bytes_beats_replicated_gather():
+    """The collective payload the plan advertises must be the (d, p) psum +
+    (p, T) core gather, and strictly under the replicated (d, T)
+    all_gather at the bench scale (d=8192, T=128, rank=16)."""
+    d, T, rank = 8192, 128, 16
+    plan = ProxPlan(axis=TASK_AXIS, num_tasks=T, n_local=T // 8)
+    p = sketch_width(rank, d, T)
+    assert plan.comm_bytes_per_refresh(d, rank) == (d * p + p * T) * 4
+    assert plan.comm_bytes_per_refresh(d, rank) < d * T * 4
+
+
 # ------------------------------------------------- shard-local primitives
 def test_rollback_columns_shard_tiles_the_batch_rollback():
     """Concatenating per-shard rollbacks in shard order must equal the
@@ -167,6 +246,32 @@ def test_sharded_requires_prox_alignment(small_problem, mesh1):
                              r"event_batch \(4\)"):
         amtl_solve(small_problem, cfg, w0, jax.random.PRNGKey(0),
                    num_epochs=1, events_per_epoch=4, mesh=mesh1)
+
+
+def test_distributed_prox_requires_sharded_engine(small_problem):
+    from repro.core import validate_config
+    cfg = AMTLConfig(eta=0.05, eta_k=0.7, tau=3, engine="batch",
+                     prox_every=4, event_batch=4, prox_rank=4,
+                     prox_mode="distributed")
+    with pytest.raises(ValueError, match="no shards to distribute over"):
+        validate_config(cfg, small_problem.reg_name)
+
+
+def test_distributed_prox_requires_prox_rank(small_problem):
+    from repro.core import validate_config
+    cfg = AMTLConfig(eta=0.05, eta_k=0.7, tau=3, engine="sharded",
+                     prox_every=4, event_batch=4, prox_mode="distributed")
+    with pytest.raises(ValueError, match="prox_rank must be set"):
+        validate_config(cfg, small_problem.reg_name)
+
+
+def test_unknown_prox_mode_rejected(small_problem):
+    from repro.core import validate_config
+    cfg = AMTLConfig(eta=0.05, eta_k=0.7, tau=3, engine="sharded",
+                     prox_every=4, event_batch=4, prox_rank=4,
+                     prox_mode="sketchy")
+    with pytest.raises(ValueError, match="unknown prox_mode"):
+        validate_config(cfg, small_problem.reg_name)
 
 
 def test_sharded_requires_tasks_axis(small_problem):

@@ -32,8 +32,12 @@ w0 = jnp.zeros((6, 8), jnp.float32)
 key = jax.random.PRNGKey(2)
 
 def states(cfg, offs):
-    ref = amtl_events_only(problem, cfg._replace(engine="batch"), w0, key,
-                           40, delay_offsets=offs)
+    # the serial reference is the batch engine, whose prox is by
+    # definition the replicated one
+    ref = amtl_events_only(problem,
+                           cfg._replace(engine="batch",
+                                        prox_mode="replicated"),
+                           w0, key, 40, delay_offsets=offs)
     outs = {n: amtl_events_only(problem, cfg, w0, key, 40,
                                 delay_offsets=offs, mesh=make_task_mesh(n))
             for n in (1, 2, 8)}
@@ -81,6 +85,53 @@ assert mean_delay[4:].max() <= 1.0, mean_delay   # fresh shards unaffected
 # task keeps getting activated (events land on both halves of the mesh).
 counts = np.asarray(ref_s.history.count)
 assert counts[4:].sum() > 0 and counts[:4].sum() > 0, counts
+
+# Rank-distributed server prox (prox_mode="distributed"), straggler +
+# dynamic step + sketch: the (task, staleness) event stream is driven by
+# the replicated PRNG chain, which the distributed collectives never
+# touch, so the stream stays BITWISE shard-count-invariant.  The iterate
+# is bitwise at 1 shard (every collective degenerates to the identity);
+# at 2/8 shards the (d, p) psum regroups the sketch's reduction over T,
+# so the iterate agrees to float32 ulp accumulated over refreshes, not
+# bitwise — the documented equivalence contract of svt_randomized_dist.
+cfg_dist = cfg_d._replace(prox_mode="distributed")
+ref_dp, outs_dp = states(cfg_dist, straggle)
+for n, st in outs_dp.items():
+    label = f"distprox-straggler/{n}-shards"
+    np.testing.assert_array_equal(np.asarray(st.task_ring),
+                                  np.asarray(ref_dp.task_ring), err_msg=label)
+    np.testing.assert_array_equal(np.asarray(st.history.buf),
+                                  np.asarray(ref_dp.history.buf),
+                                  err_msg=label)
+    np.testing.assert_array_equal(np.asarray(st.key), np.asarray(ref_dp.key),
+                                  err_msg=label)
+    assert int(st.ptr) == int(ref_dp.ptr)
+    assert int(st.event) == int(ref_dp.event)
+    if n == 1:
+        np.testing.assert_array_equal(np.asarray(st.v), np.asarray(ref_dp.v),
+                                      err_msg=label)
+    else:
+        np.testing.assert_allclose(np.asarray(st.v), np.asarray(ref_dp.v),
+                                   rtol=5e-4, atol=1e-5, err_msg=label)
+# The straggler regime itself is unchanged by the prox mode: the lagging
+# shard's tasks still read at high staleness, the fresh shards don't.
+mean_dp = np.asarray(ref_dp.history.buf).sum(axis=1) / np.maximum(
+    np.minimum(np.asarray(ref_dp.history.count), 5), 1)
+assert mean_dp[:4].min() >= 2.0 and mean_dp[4:].max() <= 1.0, mean_dp
+
+# Distributed prox at the decoupled cadence (prox_every = 2*event_batch):
+# the carried prox cache is column-sharded; resuming it across shard
+# counts must preserve the stream bitwise and the iterate to ulp.
+cfg_dist_k = cfg_dist._replace(prox_every=8)
+ref_k, outs_k = states(cfg_dist_k, straggle)
+for n, st in outs_k.items():
+    np.testing.assert_array_equal(np.asarray(st.task_ring),
+                                  np.asarray(ref_k.task_ring))
+    if n == 1:
+        np.testing.assert_array_equal(np.asarray(st.v), np.asarray(ref_k.v))
+    else:
+        np.testing.assert_allclose(np.asarray(st.v), np.asarray(ref_k.v),
+                                   rtol=5e-4, atol=1e-5)
 
 # amtl_solve end-to-end on a 2-shard mesh: iterates bitwise against the
 # batch engine.  The per-epoch objective/residual instrumentation runs

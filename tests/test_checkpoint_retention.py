@@ -1,0 +1,89 @@
+"""`repro.checkpoint.save(..., keep_last=k)` rotation: long sharded
+sessions checkpoint on a cadence and must not grow disk without bound,
+while the default behaviour (keep everything) stays bit-identical to the
+historical contract."""
+import os
+import re
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import checkpoint
+
+
+def _tree(step):
+    return {"v": jnp.full((3, 2), float(step), jnp.float32),
+            "event": jnp.asarray(step, jnp.int32)}
+
+
+def _steps_on_disk(d):
+    return sorted(int(m.group(1)) for f in os.listdir(d)
+                  if (m := re.match(r"step_(\d+)\.npz$", f)))
+
+
+def test_default_keeps_everything(tmp_path):
+    d = str(tmp_path)
+    for s in range(5):
+        checkpoint.save(d, s, _tree(s))
+    assert _steps_on_disk(d) == [0, 1, 2, 3, 4]
+
+
+def test_keep_last_rotates_oldest(tmp_path):
+    d = str(tmp_path)
+    for s in (10, 20, 30, 40, 50):
+        checkpoint.save(d, s, _tree(s), keep_last=3)
+    assert _steps_on_disk(d) == [30, 40, 50]
+    # the survivors restore intact — rotation deleted files, not data
+    got = checkpoint.restore(d, 40, like=_tree(0))
+    np.testing.assert_array_equal(np.asarray(got["v"]),
+                                  np.asarray(_tree(40)["v"]))
+    assert checkpoint.latest_step(d) == 50
+
+
+def test_keep_last_one_keeps_only_newest(tmp_path):
+    d = str(tmp_path)
+    for s in range(4):
+        checkpoint.save(d, s, _tree(s), keep_last=1)
+    assert _steps_on_disk(d) == [3]
+
+
+def test_keep_last_counts_out_of_order_saves(tmp_path):
+    """Rotation ranks by STEP number, not save order: re-saving an old
+    step never deletes a newer record — and never deletes ITSELF either,
+    so the path `save` returns always exists on return."""
+    d = str(tmp_path)
+    for s in (5, 9):
+        checkpoint.save(d, s, _tree(s), keep_last=2)
+    path = checkpoint.save(d, 1, _tree(1), keep_last=2)
+    assert os.path.exists(path)
+    assert _steps_on_disk(d) == [1, 5, 9]
+    # the next in-order save rotates the stale old record out again
+    checkpoint.save(d, 12, _tree(12), keep_last=2)
+    assert _steps_on_disk(d) == [9, 12]
+
+
+def test_keep_last_applies_when_enabled_late(tmp_path):
+    """A session that starts rotating mid-stream prunes the backlog too."""
+    d = str(tmp_path)
+    for s in range(6):
+        checkpoint.save(d, s, _tree(s))
+    checkpoint.save(d, 6, _tree(6), keep_last=2)
+    assert _steps_on_disk(d) == [5, 6]
+
+
+def test_keep_last_ignores_foreign_files(tmp_path):
+    d = str(tmp_path)
+    (tmp_path / "notes.txt").write_text("keep me")
+    (tmp_path / "step_zzz.npz").write_text("not a step record")
+    for s in range(3):
+        checkpoint.save(d, s, _tree(s), keep_last=1)
+    assert _steps_on_disk(d) == [2]
+    assert (tmp_path / "notes.txt").exists()
+    assert (tmp_path / "step_zzz.npz").exists()
+
+
+def test_keep_last_validates(tmp_path):
+    with pytest.raises(ValueError, match="keep_last must be >= 1"):
+        checkpoint.save(str(tmp_path), 0, _tree(0), keep_last=0)
+    assert _steps_on_disk(str(tmp_path)) == []

@@ -82,6 +82,55 @@ def test_l21_prox_agrees_with_core_prox():
                                rtol=1e-5, atol=1e-6)
 
 
+# ---------------------------------------------------------- svt_reconstruct
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", [(8, 4, 4), (64, 24, 128), (300, 24, 16),
+                                   (1000, 9, 130), (7, 1, 1), (256, 128, 256)])
+def test_svt_reconstruct_matches_ref(shape, dtype):
+    """(d, p, m) sweep incl. non-tile-aligned p/m and the engine's shapes
+    (p = rank+8 = 24 against a full T and a shard's n_local block)."""
+    d, p, m = shape
+    from repro.kernels.svt_reconstruct import svt_reconstruct
+    kq, ks, kv = jax.random.split(jax.random.PRNGKey(6), 3)
+    qu = jax.random.normal(kq, (d, p), dtype)
+    s = jax.random.uniform(ks, (p,), jnp.float32, 0.0, 3.0)
+    vt = jax.random.normal(kv, (p, m), dtype)
+    got = svt_reconstruct(qu, s, vt, interpret=True)
+    want = ref.svt_reconstruct_ref(qu, s, vt)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_svt_reconstruct_zero_sigma_kills_directions():
+    """A zeroed (thresholded-away) singular value must contribute exactly
+    nothing, even when its qu/vt factors are wild — the padded-lane
+    argument for the kernel relies on this."""
+    from repro.kernels.svt_reconstruct import svt_reconstruct
+    d, p, m = 40, 6, 10
+    kq, kv = jax.random.split(jax.random.PRNGKey(7))
+    qu = jax.random.normal(kq, (d, p)) * 1e3
+    vt = jax.random.normal(kv, (p, m)) * 1e3
+    s = jnp.asarray([1.0, 0.0, 2.0, 0.0, 0.0, 0.5], jnp.float32)
+    got = svt_reconstruct(qu, s, vt, interpret=True)
+    kept = jnp.asarray([0, 2, 5])
+    want = (qu[:, kept] * s[kept][None, :]) @ vt[kept, :]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 40), st.integers(1, 150))
+def test_svt_reconstruct_property(d, p, m):
+    from repro.kernels.svt_reconstruct import svt_reconstruct
+    kq, ks, kv = jax.random.split(jax.random.PRNGKey(d * 131 + p * 7 + m), 3)
+    qu = jax.random.normal(kq, (d, p))
+    s = jax.random.uniform(ks, (p,), jnp.float32, 0.0, 2.0)
+    vt = jax.random.normal(kv, (p, m))
+    got = svt_reconstruct(qu, s, vt, interpret=True)
+    want = ref.svt_reconstruct_ref(qu, s, vt)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
 # -------------------------------------------------------------- lstsq_grad
 @pytest.mark.parametrize("dtype", [jnp.float32])
 @pytest.mark.parametrize("shape", [(16, 8), (100, 50), (512, 128), (700, 130),

@@ -6,8 +6,8 @@ import jax.numpy as jnp
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.prox import (REGISTRY, get_regularizer, l21_prox, svt,
-                             svt_randomized)
+from repro.core.prox import (REGISTRY, get_regularizer, l21_prox,
+                             sketch_width, svt, svt_randomized)
 
 mats = st.tuples(st.integers(2, 24), st.integers(1, 8)).flatmap(
     lambda dt: st.lists(
@@ -90,6 +90,52 @@ def test_randomized_svt_close_to_exact():
     approx = svt_randomized(jnp.asarray(w), jnp.asarray(0.5), rank=16,
                             key=jax.random.PRNGKey(0))
     np.testing.assert_allclose(approx, exact, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------- rank-distributed sketch ---
+
+# (d, p, column-split): the split is a list of per-shard column counts, so
+# arbitrary shard counts AND uneven "shard" widths are both exercised —
+# the psum identity sum_s W_s @ Omega_s = W @ Omega does not care about
+# the equal-width layout the engine happens to use.
+sketch_cases = st.tuples(
+    st.integers(1, 20), st.integers(1, 8),
+    st.lists(st.integers(1, 5), min_size=1, max_size=6))
+
+
+@settings(max_examples=60, deadline=None)
+@given(sketch_cases, st.integers(0, 2 ** 31 - 1))
+def test_partitioned_sketch_psum_reproduces_serial_contraction(case, seed):
+    """The distributed prox's one structural assumption: partitioning the
+    rows of Omega by the column split of W and summing the per-part
+    (d, p) sketches reproduces the serial contraction W @ Omega — exactly
+    for one part, and to float32 ulp for any part count (the sum regroups
+    the reduction over T, which is the documented ulp-level caveat of
+    prox.svt_randomized_dist at n > 1 shards)."""
+    d, p, split = case
+    T = sum(split)
+    kw, ko = jax.random.split(jax.random.PRNGKey(seed))
+    w = jax.random.normal(kw, (d, T), jnp.float32)
+    omega = jax.random.normal(ko, (T, p), jnp.float32)
+    serial = w @ omega
+    parts, off = [], 0
+    for width in split:
+        parts.append(w[:, off:off + width] @ omega[off:off + width, :])
+        off += width
+    summed = sum(parts[1:], parts[0])
+    if len(split) == 1:
+        np.testing.assert_array_equal(np.asarray(summed), np.asarray(serial))
+    else:
+        np.testing.assert_allclose(np.asarray(summed), np.asarray(serial),
+                                   rtol=1e-5, atol=1e-5 * np.sqrt(T))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 2000), st.integers(1, 500), st.integers(1, 64))
+def test_sketch_width_clips_to_matrix(d, T, rank):
+    p = sketch_width(rank, d, T)
+    assert 1 <= p <= min(d, T)
+    assert p == min(rank + 8, min(d, T))
 
 
 def test_l21_rows_zeroed():
