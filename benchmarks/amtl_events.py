@@ -40,9 +40,19 @@ sketch).  On fake host devices all shards share one CPU, so
 not real multi-chip scaling — but `distprox_over_sharded` is meaningful
 even there: the replicated prox DUPLICATES the sketch on every shard
 while the distributed prox divides it, so killing that duplication shows
-up as wall-clock even on a shared CPU.  Engine equivalence (bitwise,
-aligned configs) is covered by tests/test_amtl_delta.py,
-tests/test_amtl_batch.py, and tests/test_amtl_sharded.py, not timed here.
+up as wall-clock even on a shared CPU.
+
+The SGD-AMTL rows (`delta_full`/`delta_sgd`, `batch_full`/`batch_sgd`)
+run on a SECOND problem with large per-task n (D_SGD x T_SGD, N_SGD
+samples) where the per-event gradient dominates — the paper's §III-C
+regime that minibatching targets.  The `*_sgd` rows set
+`batch_size=SGD_BATCH` (seeded rank-bsz in-kernel selection; on this CPU
+bench the oracle path gathers a static (bsz, d) block, an n/bsz FLOP
+cut); `speedup.delta_sgd_over_full` / `batch_sgd_over_full` compare each
+against its full-gradient twin and `speedup.sgd_over_full` (the CI
+floor) is their min.  Engine equivalence (bitwise, aligned configs) is
+covered by tests/test_amtl_delta.py, tests/test_amtl_batch.py, and
+tests/test_amtl_sharded.py, not timed here.
 """
 from __future__ import annotations
 
@@ -70,6 +80,15 @@ EVENT_BATCH = 32       # CPU sweet spot: larger batches amortize the prox
                        # further but the per-batch gather/scatter fixed cost
                        # grows; 32 maximizes events/sec at this scale
 PROX_K = 4             # batch_k4 row: prox_every = PROX_K * EVENT_BATCH
+# SGD-AMTL rows run their own problem: large per-task n so the per-event
+# gradient (not the engine machinery) dominates — the regime the paper's
+# §III-C "gradient computation is typically the most time consuming step"
+# describes and the one minibatching targets.  n/bsz = 16 is the available
+# FLOP lever; the recorded speedup is smaller (prox + column update are
+# unchanged).
+D_SGD, T_SGD, N_SGD = 4096, 32, 512
+SGD_BATCH = 32
+SGD_EVENTS = 64
 JSON_PATH = "BENCH_amtl_events.json"
 
 
@@ -80,9 +99,16 @@ def _problem() -> MTLProblem:
     return MTLProblem(xs, ys, "lstsq", "nuclear", 0.1)
 
 
+def _sgd_problem() -> MTLProblem:
+    kx, ky = jax.random.split(jax.random.PRNGKey(1))
+    xs = jax.random.normal(kx, (T_SGD, N_SGD, D_SGD)) / np.sqrt(D_SGD)
+    ys = jax.random.normal(ky, (T_SGD, N_SGD))
+    return MTLProblem(xs, ys, "lstsq", "nuclear", 0.1)
+
+
 def _events_per_sec(problem: MTLProblem, cfg: AMTLConfig, events: int,
                     reps: int = 3, mesh=None) -> float:
-    v0 = jnp.zeros((D, T), jnp.float32)
+    v0 = jnp.zeros((problem.dim, problem.num_tasks), jnp.float32)
     key = jax.random.PRNGKey(7)
     run = lambda: jax.block_until_ready(
         amtl_events_only(problem, cfg, v0, key, events, mesh=mesh))
@@ -111,25 +137,26 @@ def _comm_bytes_per_refresh(cfg: AMTLConfig, task_shards: int) -> int:
     return D * T * 4
 
 
-def _state_bytes(cfg: AMTLConfig, task_shards: int = 1) -> dict:
+def _state_bytes(cfg: AMTLConfig, task_shards: int = 1, d: int = D,
+                 t: int = T) -> dict:
     itemsize = 4  # f32
     if cfg.engine == "dense":
-        ring = (cfg.tau + 1) * D * T * itemsize
+        ring = (cfg.tau + 1) * d * t * itemsize
         total = ring  # the ring holds every iterate incl. the newest
     else:
         # engine="sharded" keeps one private (tau+1, d) undo ring per
         # shard; aggregate bytes scale with the shard count while the
         # per-device footprint stays the batch engine's.
-        ring = (task_shards * (cfg.tau + 1) * D * itemsize
+        ring = (task_shards * (cfg.tau + 1) * d * itemsize
                 + (cfg.tau + 1) * 4)
-        total = ring + D * T * itemsize                # + v
+        total = ring + d * t * itemsize                # + v
         # live (d, T) prox cache: delta with any amortization, batch/
         # sharded only at the decoupled cadence (prox_every > event_batch;
         # at the aligned cadence each batch refreshes before reading).
         aligned = cfg.event_batch if cfg.engine in ("batch", "sharded") \
             else 1
         if cfg.prox_every > aligned:
-            total += D * T * itemsize
+            total += d * t * itemsize
     return {"ring_bytes": ring, "state_bytes": total}
 
 
@@ -163,6 +190,20 @@ def run(repeats: int = 3) -> list[Row]:
                              prox_mode="distributed")
     sharded_repl_cfg = sharded_cfg._replace(prox_mode="replicated")
 
+    # SGD-AMTL: the same delta/batch engines on the large-n problem, full
+    # gradient vs batch_size=SGD_BATCH seeded minibatch (rank-bsz in-kernel
+    # selection; the CPU oracle path gathers a static (bsz, d) block).
+    sgd_problem = _sgd_problem()
+    delta_full_cfg = AMTLConfig(eta=0.05, eta_k=eta_k, tau=TAU,
+                                engine="delta", prox_every=PROX_EVERY,
+                                prox_rank=PROX_RANK)
+    delta_sgd_cfg = delta_full_cfg._replace(batch_size=SGD_BATCH)
+    batch_full_cfg = AMTLConfig(eta=0.05, eta_k=eta_k, tau=TAU,
+                                engine="batch", prox_every=EVENT_BATCH,
+                                event_batch=EVENT_BATCH,
+                                prox_rank=PROX_RANK)
+    batch_sgd_cfg = batch_full_cfg._replace(batch_size=SGD_BATCH)
+
     dense_eps = _events_per_sec(problem, dense_cfg, DENSE_EVENTS, repeats)
     delta_eps = _events_per_sec(problem, delta_cfg, DELTA_EVENTS, repeats)
     matched_eps = _events_per_sec(problem, delta_matched_cfg, BATCH_EVENTS,
@@ -174,6 +215,14 @@ def run(repeats: int = 3) -> list[Row]:
                                   repeats, mesh=mesh)
     sharded_repl_eps = _events_per_sec(problem, sharded_repl_cfg,
                                        BATCH_EVENTS, repeats, mesh=mesh)
+    delta_full_eps = _events_per_sec(sgd_problem, delta_full_cfg,
+                                     SGD_EVENTS, repeats)
+    delta_sgd_eps = _events_per_sec(sgd_problem, delta_sgd_cfg,
+                                    SGD_EVENTS, repeats)
+    batch_full_eps = _events_per_sec(sgd_problem, batch_full_cfg,
+                                     SGD_EVENTS, repeats)
+    batch_sgd_eps = _events_per_sec(sgd_problem, batch_sgd_cfg,
+                                    SGD_EVENTS, repeats)
     dense_mem = _state_bytes(dense_cfg)
     delta_mem = _state_bytes(delta_cfg)
     batch_mem = _state_bytes(batch_cfg)
@@ -187,11 +236,17 @@ def run(repeats: int = 3) -> list[Row]:
         "batch_k4_over_batch": batch_k4_eps / max(batch_eps, 1e-12),
         "sharded_over_batch": sharded_eps / max(batch_eps, 1e-12),
         "distprox_over_sharded": sharded_eps / max(sharded_repl_eps, 1e-12),
+        "delta_sgd_over_full": delta_sgd_eps / max(delta_full_eps, 1e-12),
+        "batch_sgd_over_full": batch_sgd_eps / max(batch_full_eps, 1e-12),
     }
+    # the CI floor: BOTH SGD rows must beat their full-gradient twin
+    speedup["sgd_over_full"] = min(speedup["delta_sgd_over_full"],
+                                   speedup["batch_sgd_over_full"])
 
     def _row(cfg: AMTLConfig, eps: float, mem: dict) -> dict:
         return {"events_per_sec": eps, "us_per_event": 1e6 / eps,
                 "prox_mode": cfg.prox_mode,
+                "batch_size": cfg.batch_size,
                 "comm_bytes_per_refresh": _comm_bytes_per_refresh(
                     cfg, task_shards), **mem}
 
@@ -203,6 +258,9 @@ def run(repeats: int = 3) -> list[Row]:
                    "prox_every": PROX_EVERY, "prox_rank": PROX_RANK,
                    "event_batch": EVENT_BATCH, "prox_k": PROX_K,
                    "task_shards": task_shards,
+                   # SGD rows' problem + minibatch (the *_full/*_sgd pairs)
+                   "d_sgd": D_SGD, "T_sgd": T_SGD, "n_samples_sgd": N_SGD,
+                   "batch_size": SGD_BATCH,
                    "backend": jax.default_backend()},
         "dense": _row(dense_cfg, dense_eps, dense_mem),
         "delta": _row(delta_cfg, delta_eps, delta_mem),
@@ -215,6 +273,16 @@ def run(repeats: int = 3) -> list[Row]:
         # PR-3 replicated prox, kept as the distprox_over_sharded baseline
         "sharded_repl": _row(sharded_repl_cfg, sharded_repl_eps,
                              sharded_mem),
+        # SGD-AMTL pairs on the large-n problem: full gradient vs the
+        # seeded rank-bsz minibatch, same engine/cadence otherwise
+        "delta_full": _row(delta_full_cfg, delta_full_eps,
+                           _state_bytes(delta_full_cfg, d=D_SGD, t=T_SGD)),
+        "delta_sgd": _row(delta_sgd_cfg, delta_sgd_eps,
+                          _state_bytes(delta_sgd_cfg, d=D_SGD, t=T_SGD)),
+        "batch_full": _row(batch_full_cfg, batch_full_eps,
+                           _state_bytes(batch_full_cfg, d=D_SGD, t=T_SGD)),
+        "batch_sgd": _row(batch_sgd_cfg, batch_sgd_eps,
+                          _state_bytes(batch_sgd_cfg, d=D_SGD, t=T_SGD)),
         "speedup": speedup,
         # kept for cross-PR continuity with the PR-1 schema
         "speedup_events_per_sec": speedup["delta_over_dense"],
@@ -250,6 +318,14 @@ def run(repeats: int = 3) -> list[Row]:
             f"prox=replicated "
             f"comm={report['sharded_repl']['comm_bytes_per_refresh']}B "
             f"vs_dist_comm={report['sharded']['comm_bytes_per_refresh']}B"),
+        Row("amtl_events/delta_sgd", 1e6 / delta_sgd_eps,
+            f"events/sec={delta_sgd_eps:.2f} bsz={SGD_BATCH}/{N_SGD} "
+            f"vs_full={speedup['delta_sgd_over_full']:.2f}x "
+            f"(full={delta_full_eps:.2f})"),
+        Row("amtl_events/batch_sgd", 1e6 / batch_sgd_eps,
+            f"events/sec={batch_sgd_eps:.2f} bsz={SGD_BATCH}/{N_SGD} "
+            f"vs_full={speedup['batch_sgd_over_full']:.2f}x "
+            f"(full={batch_full_eps:.2f})"),
         Row("amtl_events/ring_memory", 0.0,
             f"dense={dense_mem['ring_bytes']}B delta={delta_mem['ring_bytes']}B "
             f"ratio={report['ring_memory_ratio']:.0f}x"),

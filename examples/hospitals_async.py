@@ -86,9 +86,14 @@ def stream(problem, sizes):
     stacked = MTLProblem(xs, ys, "lstsq", "nuclear", 0.1)
 
     # Engine selection through default_config's validated kwargs: batched
-    # events, server prox every 4 batches (one (d, T) SVT per 32 events).
+    # events, server prox every 4 batches (one (d, T) SVT per 32 events),
+    # SGD-AMTL forward steps — each activation computes its gradient on a
+    # seeded 32-patient minibatch of the cohort instead of all n_min rows
+    # (unbiased (n/32)-scaled; the restart contract below is unchanged
+    # because the per-event sampling seeds are re-derived from the
+    # checkpointed PRNG chain, not stored).
     cfg = default_config(stacked, tau=8, engine="batch", event_batch=8,
-                         prox_every=32, dynamic_step=True)
+                         prox_every=32, dynamic_step=True, batch_size=32)
     engine = make_engine(stacked, cfg)
 
     # Slow hospitals read at ~5x the mean staleness of the fast ones.

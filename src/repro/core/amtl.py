@@ -81,6 +81,16 @@ Four engines implement the same mathematics:
       model the paper's slow-node regime (a lagging shard's tasks read at
       high staleness without stalling the other shards' event stream).
 
+SGD-AMTL (paper §V): with `AMTLConfig(batch_size=b)` the delta, batch, and
+sharded engines replace every forward-step gradient by an unbiased
+(n_t/bsz)-scaled seeded minibatch gradient (bsz = min(b, n_t), the
+simulator's convention).  The per-event sampling seed is folded off the
+main PRNG chain (`_minibatch_seed`), so the (task, staleness) event stream
+— and with batch_size=None the engines' every bit — is unchanged; the
+selection itself is generated in-kernel from counter hashes
+(`repro.kernels.ops.lstsq_grad_sampled`), with no gather and no
+materialized index array.
+
 This is bit-faithful to Algorithm 1's mathematics while being jit-compiled,
 deterministic under a PRNG key, and mesh-shardable.  Wall-clock behaviour
 (Tables I/III) is studied separately by `repro.core.simulator`.
@@ -163,6 +173,17 @@ class AMTLConfig(NamedTuple):
     #   shard-locally: O(d*p + p*T) communication, sketch flops divided
     #   by the shard count, no shard ever holds the full iterate.
     prox_mode: str = "replicated"
+    # SGD-AMTL (paper §V): if set, every forward step uses an unbiased
+    # (n_t/bsz)-scaled seeded minibatch gradient with bsz =
+    # min(batch_size, n_t) — the simulator's convention.  The per-event
+    # sampling seed is folded off the main PRNG chain (fold_in constant
+    # 11, the sketch-key pattern), so the (task, staleness) event stream
+    # is untouched and every shard of the sharded engine re-derives the
+    # identical seed, sampling shard-locally.  None = exact full
+    # gradients, bitwise-identical to the pre-SGD engines.  Supported by
+    # the delta, batch, and sharded engines (dense is the exact seed
+    # baseline).
+    batch_size: int | None = None
 
 
 class AMTLState(NamedTuple):
@@ -321,6 +342,19 @@ def _sample_activation(cfg: AMTLConfig, delay_offsets: Array, key: Array,
     return key, t, nu
 
 
+def _minibatch_seed(key: Array) -> Array:
+    """Per-event uint32 sampling seed, folded off the pre-event chain key.
+
+    fold_in (constant 11, distinct from the sketch key's 7) does not
+    advance the chain, so deriving the seed leaves the (task, staleness)
+    event stream bit-identical to the full-gradient engines; and because
+    the chain key is replicated on the sharded engine, every shard
+    derives the SAME seed for an event and re-creates its selection bits
+    locally.
+    """
+    return jax.random.bits(jax.random.fold_in(key, 11), dtype=jnp.uint32)
+
+
 def _sample_activation_batch(cfg: AMTLConfig, delay_offsets: Array,
                              key: Array, num_tasks: int, event: Array,
                              batch: int):
@@ -329,15 +363,20 @@ def _sample_activation_batch(cfg: AMTLConfig, delay_offsets: Array,
     Same splits, same draws, same staleness clamp (`event + i`) as `batch`
     consecutive calls of `_sample_activation` — the event stream is
     identical to the one-event engines by construction.  Returns
-    (next key, tasks (batch,), stalenesses (batch,)).
+    (next key, tasks (batch,), stalenesses (batch,), minibatch seeds
+    (batch,) uint32).  Each seed is `_minibatch_seed` of the chain key
+    the serial delta engine would hold at that event, so the one-event
+    and batched SGD engines sample identical minibatches; when
+    batch_size is None the seeds are unused (and dead-code-eliminated).
     """
     def one(k, i):
+        seed = _minibatch_seed(k)
         k, t, nu = _sample_activation(cfg, delay_offsets, k, num_tasks,
                                       event + i)
-        return k, (t, nu)
+        return k, (t, nu, seed)
 
-    key, (ts, nus) = jax.lax.scan(one, key, jnp.arange(batch))
-    return key, ts, nus
+    key, (ts, nus, seeds) = jax.lax.scan(one, key, jnp.arange(batch))
+    return key, ts, nus, seeds
 
 
 def _km_relaxation(cfg: AMTLConfig, history: DelayHistory, t: Array,
@@ -397,8 +436,12 @@ def _one_event_delta(problem: MTLProblem, cfg: AMTLConfig,
                                     problem.num_tasks, state.event)
     # The sketch key is folded off the pre-event key instead of split from
     # the main chain, so the task/staleness event stream stays identical to
-    # the dense engine even when the randomized refresh is enabled.
+    # the dense engine even when the randomized refresh is enabled.  The
+    # minibatch sampling seed follows the same pattern at a different fold
+    # constant.
     k_prox = jax.random.fold_in(state.key, 7) if use_randomized else None
+    mb_seed = _minibatch_seed(state.key) if cfg.batch_size is not None \
+        else None
     v = state.v
 
     def refresh(_):
@@ -423,7 +466,10 @@ def _one_event_delta(problem: MTLProblem, cfg: AMTLConfig,
         p_cache = p
 
     p_t = p[:, t]
-    g_t = problem.task_grad(t, p_t)
+    if cfg.batch_size is None:
+        g_t = problem.task_grad(t, p_t)
+    else:
+        g_t = problem.task_grad_sampled(t, p_t, mb_seed, cfg.batch_size)
 
     history, eta_k = _km_relaxation(cfg, state.history, t, nu)
 
@@ -465,9 +511,8 @@ def _one_batch(problem: MTLProblem, cfg: AMTLConfig, delay_offsets: Array,
     # Folded off the batch-start key — the key the serial engine would hold
     # at its refresh event (a refresh batch's first event).
     k_prox = jax.random.fold_in(state.key, 7) if use_randomized else None
-    key, ts, nus = _sample_activation_batch(cfg, delay_offsets, state.key,
-                                            problem.num_tasks, state.event,
-                                            bsz)
+    key, ts, nus, mb_seeds = _sample_activation_batch(
+        cfg, delay_offsets, state.key, problem.num_tasks, state.event, bsz)
     v = state.v
 
     # Server prox at the batch's first event: stale read at staleness nu_0
@@ -499,14 +544,24 @@ def _one_batch(problem: MTLProblem, cfg: AMTLConfig, delay_offsets: Array,
     # Per-event forward-step gradients at the batch-constant prox.  g_t
     # depends only on (t, p[:, t]) — not on v — so duplicates need no
     # serialization here; the scan body issues the same per-event ops as
-    # the serial engine, keeping the bits identical.
+    # the serial engine, keeping the bits identical.  With batch_size set
+    # each event samples its minibatch from the seed the serial delta
+    # engine would derive at that chain position.
     p_cols = p[:, ts]                                        # (d, bsz)
 
-    def grad_one(_, inp):
-        t, p_t = inp
-        return None, problem.task_grad(t, p_t)
+    if cfg.batch_size is None:
+        def grad_one(_, inp):
+            t, p_t = inp
+            return None, problem.task_grad(t, p_t)
 
-    _, g_rows = jax.lax.scan(grad_one, None, (ts, p_cols.T))  # (bsz, d)
+        _, g_rows = jax.lax.scan(grad_one, None, (ts, p_cols.T))  # (bsz, d)
+    else:
+        def grad_one(_, inp):
+            t, p_t, s = inp
+            return None, problem.task_grad_sampled(t, p_t, s,
+                                                   cfg.batch_size)
+
+        _, g_rows = jax.lax.scan(grad_one, None, (ts, p_cols.T, mb_seeds))
 
     # Delay recording / KM relaxation factors, in event order.
     def relax_one(h, inp):
@@ -612,8 +667,8 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
         # Folded off the batch-start key, replicated — identical to the
         # serial engines' sketch key.
         k_prox = jax.random.fold_in(st.key, 7) if use_randomized else None
-        key, ts, nus = _sample_activation_batch(cfg, offs, st.key,
-                                                num_tasks, st.event, bsz)
+        key, ts, nus, mb_seeds = _sample_activation_batch(
+            cfg, offs, st.key, num_tasks, st.event, bsz)
         lts, owned = shard_local_tasks(ts, t_off, n_local)
         lts_clamped = jnp.where(owned, lts, 0)
         v = st.v                                   # (d, n_local)
@@ -669,11 +724,24 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
         # Forward-step gradients from the shard-local task data.  Foreign
         # events run on clamped inputs and are dropped at the scatter; the
         # owner's expression is the serial engines', on the same bits.
-        def grad_one(_, inp):
-            t_l, p_t = inp
-            return None, problem_l.task_grad(t_l, p_t)
+        # Minibatch seeds come from the replicated chain replay, so the
+        # owner samples the same rows of its task's (shard-local) data the
+        # unsharded engine would at any shard count.
+        if cfg.batch_size is None:
+            def grad_one(_, inp):
+                t_l, p_t = inp
+                return None, problem_l.task_grad(t_l, p_t)
 
-        _, g_rows = jax.lax.scan(grad_one, None, (lts_clamped, p_cols.T))
+            _, g_rows = jax.lax.scan(grad_one, None,
+                                     (lts_clamped, p_cols.T))
+        else:
+            def grad_one(_, inp):
+                t_l, p_t, s = inp
+                return None, problem_l.task_grad_sampled(t_l, p_t, s,
+                                                         cfg.batch_size)
+
+            _, g_rows = jax.lax.scan(grad_one, None,
+                                     (lts_clamped, p_cols.T, mb_seeds))
 
         # Delay recording / KM relaxation in event order; only the owner
         # keeps each event's history write.
@@ -746,6 +814,16 @@ def validate_config(cfg: AMTLConfig, reg_name: str | None = None) -> None:
         raise ValueError("engine='dense' is the exact seed baseline; "
                          "prox_every>1 / prox_rank require "
                          "engine='delta', 'batch', or 'sharded'")
+    if cfg.batch_size is not None:
+        if cfg.batch_size < 1:
+            raise ValueError(
+                f"batch_size must be >= 1 (or None for exact full "
+                f"gradients), got {cfg.batch_size}")
+        if cfg.engine == "dense":
+            raise ValueError(
+                "engine='dense' is the exact seed baseline and computes "
+                "full gradients only; batch_size requires engine='delta', "
+                "'batch', or 'sharded'")
     if cfg.engine in ("batch", "sharded") \
             and cfg.prox_every % cfg.event_batch != 0:
         raise ValueError(
@@ -951,13 +1029,14 @@ def default_config(problem: MTLProblem, tau: int = 4, c: float = 0.9,
                    dynamic_step: bool = False, safety: float = 1.0, *,
                    engine: str = "delta", prox_every: int = 1,
                    prox_rank: int | None = None, event_batch: int = 1,
-                   prox_mode: str = "replicated") -> AMTLConfig:
+                   prox_mode: str = "replicated",
+                   batch_size: int | None = None) -> AMTLConfig:
     """Step sizes from Theorem 1: eta < 2/L, eta_k <= c/(2 tau/sqrt(T)+1).
 
     Engine-selection kwargs (`engine`, `prox_every`, `prox_rank`,
-    `event_batch`, `prox_mode`) go through `validate_config` — the same
-    path `make_engine` runs — so an invalid combination fails here, not at
-    the first solve.
+    `event_batch`, `prox_mode`, `batch_size`) go through
+    `validate_config` — the same path `make_engine` runs — so an invalid
+    combination fails here, not at the first solve.
     """
     lip = problem.lipschitz()
     cfg = AMTLConfig(
@@ -970,6 +1049,7 @@ def default_config(problem: MTLProblem, tau: int = 4, c: float = 0.9,
         prox_rank=prox_rank,
         event_batch=event_batch,
         prox_mode=prox_mode,
+        batch_size=batch_size,
     )
     validate_config(cfg, problem.reg_name)
     return cfg

@@ -109,6 +109,34 @@ class MTLProblem(NamedTuple):
         y_t = jax.lax.dynamic_index_in_dim(self.ys, t, axis=0, keepdims=False)
         return loss.grad(x_t, y_t, w_t)
 
+    def task_grad_sampled(self, t: Array, w_t: Array, seed: Array,
+                          batch_size: int) -> Array:
+        """Unbiased seeded-minibatch gradient of task t's loss at w_t.
+
+        SGD-AMTL's forward step: the exactly-`bsz` minibatch (bsz =
+        min(batch_size, n), the simulator's clamp) of smallest counter
+        hashes of (seed, row), scaled by (n/bsz).  For lstsq this is the
+        fused `ops.lstsq_grad_sampled` (in-kernel selection on TPU, a
+        static-size O(bsz d) gather on the CPU oracle path); other losses
+        mask the dropped rows of x to zero — a zero row contributes
+        nothing to any x^T(...) gradient — and scale the same way.
+        batch_size >= n reproduces `task_grad` (bitwise for lstsq on a
+        fixed backend).
+        """
+        from repro.kernels.ops import lstsq_grad_sampled
+        from repro.kernels.ref import sample_mask_ref
+
+        x_t = jax.lax.dynamic_index_in_dim(self.xs, t, axis=0, keepdims=False)
+        y_t = jax.lax.dynamic_index_in_dim(self.ys, t, axis=0, keepdims=False)
+        if self.loss_name == "lstsq":
+            return lstsq_grad_sampled(x_t, w_t, y_t, seed,
+                                      batch_size=batch_size)
+        n = self.xs.shape[1]
+        bsz = min(batch_size, n)
+        mask = sample_mask_ref(n, batch_size, seed)
+        x_s = jnp.where(mask[:, None], x_t, 0.0)
+        return (n / bsz) * get_loss(self.loss_name).grad(x_s, y_t, w_t)
+
     def full_grad(self, w_cols: Array) -> Array:
         """nabla f(W) column-stacked, (d, T) — paper Eq. III.2."""
         loss = get_loss(self.loss_name)

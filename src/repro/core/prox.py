@@ -61,6 +61,11 @@ def sketch_width(rank: int, d: int, num_tasks: int) -> int:
     return min(rank + 8, min(d, num_tasks))
 
 
+def _sketch_seed(key: Array) -> Array:
+    """uint32 counter seed of one refresh's sketch, from the folded key."""
+    return jax.random.bits(key, dtype=jnp.uint32)
+
+
 def svt_randomized(w: Array, t: Array, *, rank: int, key: Array) -> Array:
     """Randomized SVT for very large (d x T): project to `rank` + oversampling.
 
@@ -68,13 +73,19 @@ def svt_randomized(w: Array, t: Array, *, rank: int, key: Array) -> Array:
     d_model * T makes the dense SVD the server-side bottleneck (the paper's
     online-SVD concern, adapted: on TPU a small randomized sketch keeps the
     backward step MXU-friendly instead of sequential Brand updates).
+
+    The (T, p) test matrix Omega is never materialized per refresh: its
+    entries are counter-generated from a uint32 seed drawn off `key`, and
+    `ops.gauss_sketch` contracts W against Omega tiles generated in-kernel
+    (VMEM-resident on TPU; the jnp oracle materializes the same bits on
+    the CPU path).
     """
-    from repro.kernels.ops import svt_reconstruct
+    from repro.kernels.ops import gauss_sketch, svt_reconstruct
 
     d, T = w.shape
     p = sketch_width(rank, d, T)
-    omega = jax.random.normal(key, (T, p), dtype=jnp.float32)
-    y = w.astype(jnp.float32) @ omega                       # (d, p)
+    y = gauss_sketch(w, _sketch_seed(key), jnp.zeros((), jnp.int32),
+                     p=p)                                    # (d, p)
     q, _ = jnp.linalg.qr(y)                                  # (d, p)
     b = q.T @ w.astype(jnp.float32)                          # (p, T)
     ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
@@ -115,10 +126,13 @@ def svt_randomized_dist(w_local: Array, t: Array, *, rank: int, key: Array,
     `w_local` is this shard's (d, n_local) column block of the global
     (d, T) iterate; the return is the thresholded reconstruction of the
     SAME columns — no shard ever materializes the full iterate.  `key`
-    must be the replicated folded sketch key every shard holds, so the
-    (T, p) test matrix Omega is drawn with the serial `svt_randomized`'s
-    exact bits and partitioning its rows over shards makes the psum'd
-    sketch equal the serial contraction `W @ Omega`.
+    must be the replicated folded sketch key every shard holds: Omega's
+    entries are counter-generated from the seed drawn off that key
+    (position-determined, never materialized as a full (T, p) array), so
+    each shard generates exactly ITS row block of the serial
+    `svt_randomized`'s Omega — `row_offset = t_off` into the same global
+    counters — and the psum'd sketch equals the serial contraction
+    `W @ Omega`.
 
     Equivalence contract: on a 1-shard mesh every collective degenerates
     to the identity and each expression below is the serial path's, so the
@@ -128,16 +142,16 @@ def svt_randomized_dist(w_local: Array, t: Array, *, rank: int, key: Array,
     ulp-level, not bitwise — shard-count-invariance of the *engine* is
     asserted at that tolerance (tests/test_amtl_sharded_multidevice.py).
     """
-    from repro.kernels.ops import svt_reconstruct
+    from repro.kernels.ops import gauss_sketch, svt_reconstruct
 
     d = w_local.shape[0]
     p = sketch_width(rank, d, plan.num_tasks)
-    omega = jax.random.normal(key, (plan.num_tasks, p), dtype=jnp.float32)
     t_off = jax.lax.axis_index(plan.axis) * plan.n_local
-    omega_loc = jax.lax.dynamic_slice_in_dim(omega, t_off, plan.n_local, 0)
     # y = sum_s W_s @ Omega_s — ONE (d, p) psum; each shard's sketch flops
-    # drop from O(d*T*p) to O(d*T*p / n_shards).
-    y = jax.lax.psum(w_local.astype(jnp.float32) @ omega_loc, plan.axis)
+    # drop from O(d*T*p) to O(d*T*p / n_shards), and each shard only ever
+    # generates its own (n_local, p) rows of Omega (in-kernel on TPU).
+    y = jax.lax.psum(
+        gauss_sketch(w_local, _sketch_seed(key), t_off, p=p), plan.axis)
     q, _ = jnp.linalg.qr(y)                                  # replicated
     b_loc = q.T @ w_local.astype(jnp.float32)                # (p, n_local)
     # Assemble the projected core with a tiny (p, n_local) all_gather; the

@@ -15,9 +15,13 @@ from repro.kernels import ref
 from repro.kernels.amtl_event import amtl_event as _amtl_event_pallas
 from repro.kernels.amtl_event_batch import \
     amtl_event_batch as _amtl_event_batch_pallas
+from repro.kernels.gauss_sketch import gauss_sketch as _gauss_sketch_pallas
 from repro.kernels.km_update import km_update as _km_pallas
 from repro.kernels.l21_prox import l21_prox as _l21_pallas
 from repro.kernels.lstsq_grad import lstsq_grad as _lstsq_pallas
+from repro.kernels.lstsq_grad_sampled import \
+    lstsq_grad_sampled as _lstsq_sampled_pallas
+from repro.kernels.lstsq_grad_sampled import sample_mask as _sample_mask_pallas
 from repro.kernels.svt_reconstruct import \
     svt_reconstruct as _svt_reconstruct_pallas
 
@@ -131,6 +135,72 @@ def lstsq_grad(x: Array, w: Array, y: Array, *,
     if use_pallas or interpret:
         return _lstsq_pallas(x, w, y, interpret=interpret)
     return ref.lstsq_grad_ref(x, w, y)
+
+
+@functools.partial(jax.jit, static_argnames=("batch_size", "use_pallas",
+                                             "interpret"))
+def lstsq_grad_sampled(x: Array, w: Array, y: Array, seed: Array, *,
+                       batch_size: int, use_pallas: bool | None = None,
+                       interpret: bool = False) -> Array:
+    """Unbiased seeded-minibatch gradient (n/bsz) * 2 X_S^T (X_S w - y_S).
+
+    `seed` is the per-event uint32 sampling seed, `batch_size` static
+    (bsz = min(batch_size, n) clamp inside — the simulator's SGD-AMTL
+    convention).  S is the rank-bsz counter-hash selection of (seed, row):
+    identical in the Pallas kernel and the jnp oracle, so the CPU oracle
+    path and the TPU kernel sample the same minibatch, and every shard of
+    the sharded engine re-derives an event's selection from the
+    replicated seed.  The oracle gathers the static-size minibatch
+    (O(bsz d) FLOPs on CPU); the kernel masks in VMEM and keeps its
+    single O(n d) pass over X's strips.  batch_size >= n degenerates to
+    `lstsq_grad`'s expression bitwise per backend.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _lstsq_sampled_pallas(x, w, y, seed, batch_size=batch_size,
+                                     interpret=interpret)
+    return ref.lstsq_grad_sampled_ref(x, w, y, seed, batch_size)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "batch_size", "use_pallas",
+                                             "interpret"))
+def sample_mask(n: int, batch_size: int, seed: Array, *,
+                use_pallas: bool | None = None,
+                interpret: bool = False) -> Array:
+    """(n,) bool keep/drop bits of the seeded minibatch selection.
+
+    The standalone view of `lstsq_grad_sampled`'s in-kernel sampler; both
+    dispatch targets must agree exactly for every (n, batch_size, seed)
+    (tests/test_sampling_properties.py pins this).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _sample_mask_pallas(n, batch_size, seed, interpret=interpret)
+    return ref.sample_mask_ref(n, batch_size, seed)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "use_pallas", "interpret"))
+def gauss_sketch(w: Array, seed: Array, row_offset: Array, *, p: int,
+                 use_pallas: bool | None = None,
+                 interpret: bool = False) -> Array:
+    """(d, p) f32 randomized-SVT sketch W @ Omega, Omega unmaterialized.
+
+    Omega's entry (r, c) is a Box-Muller normal over counter hashes of
+    (seed, r, c) — the Pallas kernel generates tiles in VMEM (Omega never
+    touches HBM), the oracle materializes the same bits.  `row_offset`
+    (traced) is the block's first global Omega row: 0 for the serial
+    prox, the shard's global column offset for the rank-distributed one —
+    partitioning rows this way keeps sum_s W_s @ Omega_s = W @ Omega over
+    one global Omega, the distributed prox's psum identity.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or interpret:
+        return _gauss_sketch_pallas(w, seed, row_offset, p=p,
+                                    interpret=interpret)
+    return ref.gauss_sketch_ref(w, seed, row_offset, p)
 
 
 @functools.partial(jax.jit, static_argnames=(

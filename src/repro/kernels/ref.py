@@ -144,6 +144,150 @@ def lstsq_grad_ref(x: Array, w: Array, y: Array) -> Array:
     return (2.0 * (x32.T @ (x32 @ w32 - y32))).astype(w.dtype)
 
 
+# ------------------------------------------------ counter-based sampling ---
+#
+# The SGD engines generate their per-event minibatch selection from a
+# 32-bit counter hash instead of a materialized index array: the minibatch
+# is the EXACTLY-bsz rows whose hash(seed, i) ranks smallest (ties broken
+# by row index — a strict total order, so the set is well defined even
+# under hash collisions).  That rank cut is summarized by two uint32
+# scalars, the bsz-th smallest (hash, row) pair: row i's keep bit is then
+# the purely local expression
+#
+#     h_i < cut_h  or  (h_i == cut_h and i <= cut_i)
+#
+# which is what the Pallas kernel evaluates per (block_n, 1) strip in VMEM
+# — no gather, no index array crosses HBM, only (seed, cut_h, cut_i).  The
+# SAME uint32 expressions run in the jnp oracle below and inside the
+# kernel bodies (plain jnp; the kernel imports these helpers), so
+# selection bits agree exactly by construction: the CPU oracle path and
+# the TPU kernel sample identical minibatches, and every shard of the
+# sharded engine re-derives an event's selection locally from the
+# replicated seed.  Exact-size selection (vs thresholded Bernoulli) is
+# what buys the CPU oracle its FLOP win: knowing |S| = bsz statically, the
+# oracle gathers the bsz rows and contracts O(bsz * d) instead of masking
+# a dense O(n * d) product — the same uniform-without-replacement law as
+# the float64 simulator's `rng.choice`.
+
+def counter_hash(seed: Array, ctr: Array) -> Array:
+    """uint32 hash of (seed, counter): lowbias32 finalizer over the pair.
+
+    `seed` is a uint32 scalar (one per sampling event), `ctr` any uint32
+    array of counters (row indices, or flattened (row, col) positions).
+    Pure jnp uint32 arithmetic — multiplies, xors, logical shifts — so the
+    expression lowers identically on the oracle path and inside a Pallas
+    TPU kernel body.
+    """
+    x = ctr * jnp.uint32(0x9E3779B9) ^ seed
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def sample_cutoff(n: int, batch_size: int, seed: Array) -> tuple[Array, Array]:
+    """(cut_h, cut_i) uint32 scalars: the bsz-th smallest (hash, row) pair.
+
+    The minibatch S is the bsz = min(batch_size, n) rows of smallest
+    counter_hash(seed, i), ties broken by row index (jnp.argsort is
+    stable, so the sort order IS the (hash, row) lexicographic order).
+    Row i is in S iff h_i < cut_h or (h_i == cut_h and i <= cut_i) — a
+    per-row local predicate, which is how the Pallas kernel re-derives
+    the selection in VMEM from just these two scalars.  batch_size >= n
+    saturates the cutoff (every real row kept): the clamp that makes the
+    saturated path degrade to the full gradient.  O(n log n) uint32 sort
+    per event — noise next to the O(n d) (full) or O(bsz d) (sampled)
+    gradient contraction it steers.
+    """
+    bsz = min(batch_size, n)
+    if bsz >= n:
+        return jnp.uint32(0xFFFFFFFF), jnp.uint32(n - 1)
+    h = counter_hash(seed, jnp.arange(n, dtype=jnp.uint32))
+    kth = jnp.argsort(h)[bsz - 1]
+    return h[kth], kth.astype(jnp.uint32)
+
+
+def sample_mask_ref(n: int, batch_size: int, seed: Array) -> Array:
+    """(n,) bool keep/drop bits; exactly min(batch_size, n) are set."""
+    cut_h, cut_i = sample_cutoff(n, batch_size, seed)
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    h = counter_hash(seed, idx)
+    return (h < cut_h) | ((h == cut_h) & (idx <= cut_i))
+
+
+def lstsq_grad_sampled_ref(x: Array, w: Array, y: Array, seed: Array,
+                           batch_size: int) -> Array:
+    """Unbiased seeded-minibatch least-squares gradient.
+
+        (n/bsz) * 2 X_S^T (X_S w - y_S),   S = rank-bsz selection
+
+    with bsz = min(batch_size, n) — the simulator's `(n_t / bsz)` SGD-AMTL
+    convention.  |S| = bsz is static, so the oracle GATHERS the selected
+    rows (the argsort prefix — the same set `sample_mask_ref` flags) and
+    contracts a (bsz, d) block: O(bsz * d) FLOPs where the full gradient
+    pays O(n * d).  The kernel computes the identical quantity as a
+    masked dense contraction (it may not gather), so kernel vs oracle
+    agree to summation-order rounding, like every kernel pair here.  When
+    batch_size >= n this IS `lstsq_grad_ref` — same call, bitwise.
+    """
+    n = x.shape[0]
+    bsz = min(batch_size, n)
+    if bsz >= n:
+        return lstsq_grad_ref(x, w, y)
+    h = counter_hash(seed, jnp.arange(n, dtype=jnp.uint32))
+    sel = jnp.argsort(h)[:bsz]
+    x32 = x[sel].astype(jnp.float32)
+    y32 = y[sel].astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    r = x32 @ w32 - y32
+    return ((2.0 * (n / bsz)) * (x32.T @ r)).astype(w.dtype)
+
+
+def gauss_from_counters(seed: Array, ctr: Array) -> Array:
+    """f32 standard normals from uint32 counters (Box-Muller).
+
+    Two counter hashes (2*ctr, 2*ctr + 1) feed one Box-Muller cosine
+    branch.  The top 24 bits of each hash give an exact f32 uniform —
+    u1 in (0, 1] (never 0, so the log is finite), u2 in [0, 1).  Same
+    jnp expression in the oracle and the Pallas sketch kernel, so the
+    unmaterialized Omega tiles carry the oracle's exact bits.
+    """
+    u1 = counter_hash(seed, ctr * jnp.uint32(2))
+    u2 = counter_hash(seed, ctr * jnp.uint32(2) + jnp.uint32(1))
+    f1 = ((u1 >> 8).astype(jnp.float32) + 1.0) * jnp.float32(2.0 ** -24)
+    f2 = (u2 >> 8).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+    return jnp.sqrt(-2.0 * jnp.log(f1)) * jnp.cos(
+        jnp.float32(2.0 * 3.141592653589793) * f2)
+
+
+def gauss_omega_ref(rows: int, p: int, seed: Array,
+                    row_offset: Array | int = 0) -> Array:
+    """(rows, p) f32 block of the counter-generated global sketch Omega.
+
+    Entry (r, c) is gauss_from_counters(seed, (row_offset + r) * p + c):
+    position-determined, so any row block of the global (T, p) Omega can
+    be generated locally — the sharded prox re-derives ITS rows from the
+    replicated seed and the partitioned-psum identity
+    sum_s W_s @ Omega_s = W @ Omega holds over the same global matrix.
+    """
+    off = jnp.asarray(row_offset, jnp.uint32)
+    r_idx = (off + jnp.arange(rows, dtype=jnp.uint32))[:, None]
+    c_idx = jnp.arange(p, dtype=jnp.uint32)[None, :]
+    return gauss_from_counters(seed, r_idx * jnp.uint32(p) + c_idx)
+
+
+def gauss_sketch_ref(w: Array, seed: Array, row_offset: Array | int,
+                     p: int) -> Array:
+    """(d, p) f32 sketch W @ Omega over counter-generated normals.
+
+    The oracle materializes its (rows, p) Omega block; the Pallas kernel
+    generates the same bits tile-by-tile in VMEM without ever writing
+    Omega to HBM.  `row_offset` is this block's first global Omega row
+    (0 for the serial prox, t_off for a shard's column block).
+    """
+    omega = gauss_omega_ref(w.shape[1], p, seed, row_offset)
+    return w.astype(jnp.float32) @ omega
+
+
 def sliding_flash_attention_ref(q: Array, k: Array, v: Array, *,
                                 window: int | None, causal: bool = True,
                                 softcap: float | None = None) -> Array:

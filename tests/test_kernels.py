@@ -181,6 +181,114 @@ def test_lstsq_grad_is_true_gradient():
                                rtol=1e-5, atol=1e-5)
 
 
+# ------------------------------------------------------ lstsq_grad_sampled
+@pytest.mark.parametrize("seed", [0, 1, 0xDEADBEEF])
+@pytest.mark.parametrize("shape,bsz", [((16, 8), 4), ((100, 50), 25),
+                                       ((512, 128), 64), ((700, 130), 33),
+                                       ((1, 5), 1), ((1000, 28), 512),
+                                       ((30, 10), 30), ((30, 10), 99)])
+def test_lstsq_grad_sampled_matches_ref(shape, bsz, seed):
+    """Seeded-minibatch kernel vs oracle across block boundaries, bsz = n,
+    and the saturated bsz > n clamp."""
+    from repro.kernels.lstsq_grad_sampled import lstsq_grad_sampled
+    n, d = shape
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = jax.random.normal(kx, (n, d), jnp.float32) / np.sqrt(d)
+    w = jax.random.normal(kw, (d,), jnp.float32)
+    y = jax.random.normal(ky, (n,), jnp.float32)
+    s = jnp.asarray(seed, jnp.uint32)
+    got = lstsq_grad_sampled(x, w, y, s, batch_size=bsz, interpret=True)
+    want = ref.lstsq_grad_sampled_ref(x, w, y, s, bsz)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_lstsq_grad_sampled_saturated_equals_full_kernel():
+    """batch_size >= n inside the KERNEL: all-ones mask and unit scale must
+    reproduce the full-gradient kernel's arithmetic."""
+    from repro.kernels.lstsq_grad_sampled import lstsq_grad_sampled
+    n, d = 600, 40
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(8), 3)
+    x = jax.random.normal(kx, (n, d), jnp.float32) / np.sqrt(d)
+    w = jax.random.normal(kw, (d,), jnp.float32)
+    y = jax.random.normal(ky, (n,), jnp.float32)
+    got = lstsq_grad_sampled(x, w, y, jnp.asarray(5, jnp.uint32),
+                             batch_size=n, interpret=True)
+    want = lstsq_grad(x, w, y, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 700), st.integers(1, 160), st.integers(1, 700),
+       st.integers(0, 2**32 - 1))
+def test_lstsq_grad_sampled_property(n, d, bsz, seed):
+    from repro.kernels.lstsq_grad_sampled import lstsq_grad_sampled
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(n * 7 + d), 3)
+    x = jax.random.normal(kx, (n, d)) / np.sqrt(max(d, 1))
+    w = jax.random.normal(kw, (d,))
+    y = jax.random.normal(ky, (n,))
+    s = jnp.asarray(seed, jnp.uint32)
+    got = lstsq_grad_sampled(x, w, y, s, batch_size=bsz, interpret=True)
+    want = ref.lstsq_grad_sampled_ref(x, w, y, s, bsz)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 1100), st.integers(1, 1100), st.integers(0, 2**32 - 1))
+def test_sample_mask_kernel_bitwise(n, bsz, seed):
+    """Selection bits are EXACT (pure uint32 arithmetic): kernel == oracle
+    with array_equal, no tolerance."""
+    from repro.kernels.lstsq_grad_sampled import sample_mask
+    s = jnp.asarray(seed, jnp.uint32)
+    got = sample_mask(n, bsz, s, interpret=True)
+    want = ref.sample_mask_ref(n, bsz, s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ----------------------------------------------------------- gauss_sketch
+@pytest.mark.parametrize("d,t,p", [(8, 4, 4), (64, 24, 24), (300, 16, 9),
+                                   (1024, 128, 24), (2000, 130, 130),
+                                   (7, 1, 1)])
+def test_gauss_sketch_matches_ref(d, t, p):
+    """In-kernel counter-generated Omega vs the materializing oracle,
+    incl. p > 128 (multi-lane-tile Omega) and non-aligned shapes."""
+    from repro.kernels.gauss_sketch import gauss_sketch
+    w = jax.random.normal(jax.random.PRNGKey(9), (d, t), jnp.float32)
+    s = jnp.asarray(0xC0FFEE, jnp.uint32)
+    off = jnp.zeros((), jnp.int32)
+    got = gauss_sketch(w, s, off, p=p, interpret=True)
+    want = ref.gauss_sketch_ref(w, s, off, p)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gauss_sketch_row_offset_partitions_globally():
+    """Shard semantics: row blocks of W sketched at their global offsets
+    must sum to the full sketch — the psum identity of the distributed
+    randomized SVT."""
+    from repro.kernels.gauss_sketch import gauss_sketch
+    d, t, p = 96, 12, 8
+    w = jax.random.normal(jax.random.PRNGKey(10), (d, t), jnp.float32)
+    s = jnp.asarray(1234, jnp.uint32)
+    full = gauss_sketch(w, s, jnp.zeros((), jnp.int32), p=p, interpret=True)
+    parts = sum(
+        gauss_sketch(w[:, o:o + 4], s, jnp.asarray(o, jnp.int32), p=p,
+                     interpret=True)
+        for o in (0, 4, 8))
+    np.testing.assert_allclose(parts, full, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 500), st.integers(1, 140), st.integers(1, 140),
+       st.integers(0, 2**32 - 1))
+def test_gauss_sketch_property(d, t, p, seed):
+    from repro.kernels.gauss_sketch import gauss_sketch
+    w = jax.random.normal(jax.random.PRNGKey(d * 13 + t), (d, t))
+    s = jnp.asarray(seed, jnp.uint32)
+    off = jnp.zeros((), jnp.int32)
+    got = gauss_sketch(w, s, off, p=p, interpret=True)
+    want = ref.gauss_sketch_ref(w, s, off, p)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
 # ---------------------------------------------------------------- ops layer
 def test_ops_dispatch_cpu_uses_ref():
     from repro.kernels import ops

@@ -25,9 +25,11 @@ import jax
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
-from repro.core.amtl import (AMTLConfig, _sample_activation,
-                             _sample_activation_batch, make_engine)
+from repro.core.amtl import (AMTLConfig, _minibatch_seed, _sample_activation,
+                             _sample_activation_batch, amtl_events_only,
+                             make_engine)
 from repro.core.losses import MTLProblem
+from repro.kernels import ops, ref
 
 
 @st.composite
@@ -56,18 +58,24 @@ def test_batch_sampler_replays_serial_chain_exactly(setup):
     event0_j = jnp.asarray(event0, jnp.int32)
 
     key = key0
-    want_ts, want_nus = [], []
+    want_ts, want_nus, want_seeds = [], [], []
     for i in range(batch):
+        # the minibatch seed is folded off the PRE-event chain key — the
+        # exact key the serial delta engine holds when it derives its seed
+        want_seeds.append(int(_minibatch_seed(key)))
         key, t, nu = _sample_activation(cfg, offs, key, num_tasks,
                                         event0_j + i)
         want_ts.append(int(t))
         want_nus.append(int(nu))
 
-    got_key, got_ts, got_nus = _sample_activation_batch(
+    got_key, got_ts, got_nus, got_seeds = _sample_activation_batch(
         cfg, offs, key0, num_tasks, event0_j, batch)
 
     np.testing.assert_array_equal(np.asarray(got_ts), want_ts)
     np.testing.assert_array_equal(np.asarray(got_nus), want_nus)
+    # the batched replay derives the SAME per-event sampling seeds as the
+    # one-event engine's serial fold — the SGD engines' equivalence hinge
+    np.testing.assert_array_equal(np.asarray(got_seeds), want_seeds)
     # the chain head must also coincide: the next batch continues the same
     # serial split sequence
     np.testing.assert_array_equal(np.asarray(got_key), np.asarray(key))
@@ -145,3 +153,119 @@ def test_session_split_at_any_event_boundary_resumes_bitwise(setup):
     for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(resumed),
                     strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------ seeded minibatch sampling
+#
+# SGD-AMTL's forward step (PR 6).  Three contracts:
+#   * the in-kernel sampler's keep/drop bits equal the jnp oracle's for
+#     every (n, batch_size, seed) — selection is pure counter arithmetic;
+#   * the minibatch gradient is unbiased: averaged over seeds it converges
+#     to the full gradient under the (n/bsz) scaling;
+#   * batch_size >= n (and batch_size=None at the engine level) degrades
+#     to the exact full-gradient path, bitwise on a fixed backend.
+
+
+@st.composite
+def _mask_setups(draw):
+    n = draw(st.integers(1, 1100))          # crosses the 512 block boundary
+    b = draw(st.integers(1, 1100))          # incl. batch_size >= n
+    seed = draw(st.integers(0, 2**32 - 1))
+    return n, b, seed
+
+
+@settings(max_examples=40, deadline=None)
+@given(_mask_setups())
+def test_sample_mask_kernel_matches_oracle_bitwise(setup):
+    """The Pallas sampler (interpret mode) and the jnp oracle must emit the
+    SAME selection bits — they share `counter_hash`/`sample_cutoff`, and
+    this pins that the kernel's iota/padding plumbing preserves them."""
+    n, b, seed = setup
+    seed_j = jnp.asarray(seed, jnp.uint32)
+    want = np.asarray(ref.sample_mask_ref(n, b, seed_j))
+    got = np.asarray(ops.sample_mask(n, b, seed_j, interpret=True))
+    np.testing.assert_array_equal(got, want)
+    # rank-based selection keeps EXACTLY min(b, n) rows — what licenses
+    # the oracle's static-size gather
+    assert got.sum() == min(b, n)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(0, 40))
+def test_batch_size_at_least_n_is_bitwise_full_gradient(seed, extra):
+    """batch_size >= n: mask all-ones and scale (n/bsz) == 1, so the sampled
+    op must reproduce `ops.lstsq_grad` BITWISE on the oracle path — the
+    engines' batch_size=None arithmetic is this path."""
+    n, d = 13, 5
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = jax.random.normal(kx, (n, d), jnp.float32)
+    w = jax.random.normal(kw, (d,), jnp.float32)
+    y = jax.random.normal(ky, (n,), jnp.float32)
+    got = ops.lstsq_grad_sampled(x, w, y, jnp.asarray(seed, jnp.uint32),
+                                 batch_size=n + extra, use_pallas=False)
+    want = ops.lstsq_grad(x, w, y, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_minibatch_gradient_is_unbiased_over_seeds():
+    """E_seed[(n/bsz) 2 X_S^T(X_S w - y_S)] = 2 X^T(X w - y): the mean over
+    a large fixed seed set must approach the full gradient (deterministic
+    seed set, statistical tolerance — no flake)."""
+    n, d, b = 40, 6, 10
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = jax.random.normal(kx, (n, d), jnp.float32)
+    w = jax.random.normal(kw, (d,), jnp.float32)
+    y = jax.random.normal(ky, (n,), jnp.float32)
+    seeds = jnp.arange(6000, dtype=jnp.uint32)
+    grads = jax.vmap(
+        lambda s: ref.lstsq_grad_sampled_ref(x, w, y, s, b))(seeds)
+    mean = np.asarray(grads, np.float64).mean(axis=0)
+    full = np.asarray(ref.lstsq_grad_ref(x, w, y), np.float64)
+    rel = np.linalg.norm(mean - full) / np.linalg.norm(full)
+    assert rel < 0.08, rel
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, _N), st.integers(0, 4))
+def test_delta_and_batch_engines_agree_bitwise_with_minibatching(
+        seed, batch_size, tau):
+    """Aligned delta/batch configs with batch_size set: both engines must
+    fold the SAME per-event sampling seed off the same chain position, so
+    their full states stay bitwise equal on the CPU oracle path."""
+    problem = _tiny_problem()
+    eta = 1.0 / problem.lipschitz()
+    delta_cfg = AMTLConfig(eta=eta, eta_k=0.6, tau=tau, engine="delta",
+                           prox_every=3, batch_size=batch_size)
+    batch_cfg = delta_cfg._replace(engine="batch", event_batch=3)
+    w0 = jnp.zeros((_D, _T), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    d_st = amtl_events_only(problem, delta_cfg, w0, key, 12)
+    b_st = amtl_events_only(problem, batch_cfg, w0, key, 12)
+    np.testing.assert_array_equal(np.asarray(d_st.v), np.asarray(b_st.v))
+    np.testing.assert_array_equal(np.asarray(d_st.key), np.asarray(b_st.key))
+    assert int(d_st.event) == int(b_st.event) == 12
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, _N))
+def test_minibatching_leaves_event_stream_untouched(seed, batch_size):
+    """The sampling seeds are folded OFF the chain (fold_in derivations,
+    never split): enabling batch_size must not perturb the PRNG chain head,
+    so the (task, staleness) stream — and hence every staleness/shard
+    contract — is identical to the full-gradient run's."""
+    problem = _tiny_problem()
+    eta = 1.0 / problem.lipschitz()
+    full_cfg = AMTLConfig(eta=eta, eta_k=0.6, tau=2, engine="delta",
+                          prox_every=2)
+    sgd_cfg = full_cfg._replace(batch_size=batch_size)
+    w0 = jnp.zeros((_D, _T), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    full_st = amtl_events_only(problem, full_cfg, w0, key, 10)
+    sgd_st = amtl_events_only(problem, sgd_cfg, w0, key, 10)
+    np.testing.assert_array_equal(np.asarray(full_st.key),
+                                  np.asarray(sgd_st.key))
+    np.testing.assert_array_equal(np.asarray(full_st.history.buf),
+                                  np.asarray(sgd_st.history.buf))
+    if batch_size >= _N:     # saturated minibatch IS the full gradient
+        np.testing.assert_array_equal(np.asarray(full_st.v),
+                                      np.asarray(sgd_st.v))
