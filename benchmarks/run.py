@@ -3,8 +3,9 @@
 
 Paper artifacts:   table1 (Table I), table3 (Table III), fig3 (Fig. 3),
                    fig4 (Fig. 4), table456 (Tables IV-VI)
-Beyond paper:      kernels (fusion microbench), roofline (from dry-run
-                   JSONL, printed if the file exists)
+Beyond paper:      kernels (fusion microbench), serving (learn-while-serve
+                   request throughput + predict latency), roofline (from
+                   dry-run JSONL, printed if the file exists)
 """
 from __future__ import annotations
 
@@ -28,7 +29,7 @@ def main() -> None:
     import functools
 
     from benchmarks import (amtl_events, fig3_scaling, fig4_convergence,
-                            kernels_bench, sgd_amtl, table1_timing,
+                            kernels_bench, serving, sgd_amtl, table1_timing,
                             table3_public, table456_dynamic_step)
     suites = {
         "table1": table1_timing.run,
@@ -40,6 +41,7 @@ def main() -> None:
         "kernels": kernels_bench.run,
         "amtl_events": functools.partial(amtl_events.run,
                                          repeats=args.repeats),
+        "serving": functools.partial(serving.run, repeats=args.repeats),
     }
     names = args.only.split(",") if args.only else list(suites)
 

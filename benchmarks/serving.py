@@ -1,0 +1,152 @@
+"""Learn-while-serve throughput bench: the `serving` telemetry row.
+
+Measures the `AMTLServer` request path at a serving-shaped scale
+(d=1024, T=32): requests/sec with learning ON (every request batch also
+submits feedback and runs one coalesced engine chunk) vs FROZEN (same
+traffic, learning off — the pure double-buffer read path), plus p50/p95
+per-batch predict latency on the learning path.  Every timer read sits
+behind `jax.block_until_ready` — the wall-clock numbers measure compute,
+not async dispatch.
+
+The row is MERGED into `BENCH_amtl_events.json` under the key
+`"serving"` (the engine rows written by `benchmarks.amtl_events` are
+left untouched, and that bench preserves this row when it rewrites the
+file), so one tracked record carries both the engine and the serving
+trajectories across PRs.  Keys:
+
+    requests_per_sec_learning   rows served/sec, feedback+learning on
+    requests_per_sec_frozen     rows served/sec, frozen server
+    predict_p50_ms              median per-batch predict latency (ms)
+    predict_p95_ms              95th-pct per-batch predict latency (ms)
+    events_per_sec_learning     engine events absorbed/sec while serving
+    learning_slowdown           frozen/learning requests/sec ratio
+    config                      problem + traffic shape
+
+Serving equivalence (frozen == frozen engine bitwise, learning == plain
+`run` over the same chunks bitwise) is covered by tests/test_serve.py,
+not timed here.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import AMTLConfig, MTLProblem, amtl_max_step
+from repro.serve import AMTLServer, ServeConfig
+
+D_S, T_S, N_S, TAU_S = 1024, 32, 8, 8
+EVENT_BATCH = 8
+CHUNK_EVENTS = 32          # per-chunk coalescing budget (4 batches)
+BATCH_REQ = 64             # prediction rows per request batch
+FEEDBACK_PER_BATCH = 16    # labeled feedback rows per request batch
+N_BATCHES = 32             # request batches per timed rep
+JSON_PATH = "BENCH_amtl_events.json"
+
+
+def _problem() -> MTLProblem:
+    kx, ky = jax.random.split(jax.random.PRNGKey(2))
+    xs = jax.random.normal(kx, (T_S, N_S, D_S)) / np.sqrt(D_S)
+    ys = jax.random.normal(ky, (T_S, N_S))
+    return MTLProblem(xs, ys, "lstsq", "nuclear", 0.1)
+
+
+def _cfg() -> AMTLConfig:
+    return AMTLConfig(eta=0.05, eta_k=amtl_max_step(TAU_S, T_S), tau=TAU_S,
+                      engine="batch", event_batch=EVENT_BATCH,
+                      prox_every=EVENT_BATCH, prox_rank=8)
+
+
+def _traffic(problem: MTLProblem, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    t = rng.integers(0, problem.num_tasks, size=(N_BATCHES, BATCH_REQ))
+    x = rng.standard_normal((N_BATCHES, BATCH_REQ, problem.dim)) \
+        .astype(np.float32)
+    fb = rng.integers(0, problem.num_tasks,
+                      size=(N_BATCHES, FEEDBACK_PER_BATCH))
+    return t, x, fb
+
+
+def _server(problem: MTLProblem, learning: bool) -> AMTLServer:
+    w0 = jnp.zeros((problem.dim, problem.num_tasks), jnp.float32)
+    return AMTLServer(problem, _cfg(), w0, jax.random.PRNGKey(7),
+                      ServeConfig(chunk_events=CHUNK_EVENTS,
+                                  learning=learning, max_batch=BATCH_REQ))
+
+
+def _drive(problem: MTLProblem, learning: bool):
+    """One full traffic replay; returns (wall secs, per-batch predict ms,
+    events learned).  Fresh server per rep so chunk state is identical."""
+    server = _server(problem, learning)
+    t, x, fb = _traffic(problem)
+    lat_ms = []
+    events = 0
+    t0 = time.perf_counter()
+    for i in range(N_BATCHES):
+        tb = time.perf_counter()
+        preds = server.predict(t[i], x[i])
+        jax.block_until_ready(preds)      # latency = computed, not dispatched
+        lat_ms.append(1e3 * (time.perf_counter() - tb))
+        if learning:
+            server.submit_feedback(fb[i])
+            events += server.step()       # step() commits (blocks) the swap
+    total = time.perf_counter() - t0
+    return total, lat_ms, events
+
+
+def run(repeats: int = 3) -> list[Row]:
+    problem = _problem()
+    # warm-up: compile predict (both padded shapes are the same bucket),
+    # the engine run at the steady chunk size, and the init path
+    _drive(problem, learning=True)
+    _drive(problem, learning=False)
+
+    n_requests = N_BATCHES * BATCH_REQ
+    best_learn, best_frozen = float("inf"), float("inf")
+    lat_ms, events = [], 0
+    for _ in range(repeats):
+        total, lat, ev = _drive(problem, learning=True)
+        if total < best_learn:
+            best_learn, lat_ms, events = total, lat, ev
+        best_frozen = min(best_frozen, _drive(problem, learning=False)[0])
+
+    rps_learn = n_requests / best_learn
+    rps_frozen = n_requests / best_frozen
+    row = {
+        "requests_per_sec_learning": rps_learn,
+        "requests_per_sec_frozen": rps_frozen,
+        "predict_p50_ms": float(np.percentile(lat_ms, 50)),
+        "predict_p95_ms": float(np.percentile(lat_ms, 95)),
+        "events_per_sec_learning": events / best_learn,
+        "learning_slowdown": rps_frozen / max(rps_learn, 1e-12),
+        "config": {"d": D_S, "T": T_S, "n_samples": N_S, "tau": TAU_S,
+                   "engine": "batch", "event_batch": EVENT_BATCH,
+                   "chunk_events": CHUNK_EVENTS,
+                   "batch_requests": BATCH_REQ,
+                   "feedback_per_batch": FEEDBACK_PER_BATCH,
+                   "n_batches": N_BATCHES,
+                   "backend": jax.default_backend()},
+    }
+    try:
+        with open(JSON_PATH) as f:
+            report = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        report = {}
+    report["serving"] = row
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+
+    return [
+        Row("serving/requests_learning", 1e6 / rps_learn,
+            f"req/sec={rps_learn:.1f} events/sec={row['events_per_sec_learning']:.1f}"),
+        Row("serving/requests_frozen", 1e6 / rps_frozen,
+            f"req/sec={rps_frozen:.1f} "
+            f"slowdown_learning={row['learning_slowdown']:.2f}x"),
+        Row("serving/predict_latency", 1e3 * row["predict_p50_ms"],
+            f"p50={row['predict_p50_ms']:.2f}ms "
+            f"p95={row['predict_p95_ms']:.2f}ms batch={BATCH_REQ}"),
+    ]

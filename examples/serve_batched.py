@@ -23,21 +23,28 @@ def main():
 
     prompts = jax.random.randint(jax.random.PRNGKey(1), (b, prompt_len), 0,
                                  cfg.vocab_size)
+    # JAX dispatches asynchronously: block before BOTH timer reads so the
+    # window covers the prefill compute, not just its dispatch (and not
+    # the still-materializing params/prompts from above).
+    jax.block_until_ready((params, prompts))
     t0 = time.time()
     logits, cache = prefill(params, {"tokens": prompts}, cfg, s_max=s_max,
                             remat=False)
+    jax.block_until_ready((logits, cache))
     print(f"prefill: batch={b} len={prompt_len} in {time.time()-t0:.2f}s")
 
     decode = jax.jit(lambda c, tok, pos: decode_step(params, c, tok, pos,
                                                      cfg))
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     out_tokens = [tok]
+    jax.block_until_ready(tok)      # don't charge the argmax to the loop
     t0 = time.time()
     for i in range(gen - 1):
         logits, cache = decode(cache, tok, jnp.asarray(prompt_len + i,
                                                        jnp.int32))
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         out_tokens.append(tok)
+    jax.block_until_ready(tok)      # drain the async queue before timing
     dt = time.time() - t0
     gen_toks = jnp.concatenate(out_tokens, axis=1)
     print(f"decoded {gen} tokens x {b} requests in {dt:.2f}s "

@@ -55,11 +55,19 @@ def save(ckpt_dir: str, step: int, tree: Any,
     np.savez(tmp, **_flatten(tree))
     os.replace(tmp, path)
     if keep_last is not None:
-        steps = sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
-                       if (m := re.match(r"step_(\d+)\.npz$", f)))
-        for old in steps[:-keep_last]:
-            if old != step:
-                os.remove(os.path.join(ckpt_dir, f"step_{old:08d}.npz"))
+        # Rank records by parsed step but delete the FILENAME that
+        # matched: a record written with different zero padding (e.g.
+        # step_5.npz) still rotates out instead of surviving forever
+        # because its re-formatted name step_00000005.npz never existed.
+        # The file just written ranks newest among equal steps and is
+        # never deleted, so the returned path always exists on return.
+        just_written = os.path.basename(path)
+        records = sorted(((int(m.group(1)), f) for f in os.listdir(ckpt_dir)
+                          if (m := re.match(r"step_(\d+)\.npz$", f))),
+                         key=lambda r: (r[0], r[1] == just_written))
+        for _, fname in records[:-keep_last]:
+            if fname != just_written:
+                os.remove(os.path.join(ckpt_dir, fname))
     return path
 
 

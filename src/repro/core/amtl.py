@@ -110,7 +110,9 @@ bitwise: `run(·, n + m)` == `run(run(·, n), m)` for every engine.  Engine
 states are plain pytrees of arrays and round-trip through
 `repro.checkpoint.save/restore`, resuming bitwise — including the sharded
 state under a mesh.  `amtl_solve` (epoch metrics) and `amtl_events_only`
-(bench path) are thin wrappers over the session API.
+(bench path) are thin wrappers over the session API, and the online
+learning-while-serving platform (`repro.serve.AMTLServer`) holds one of
+these sessions long-lived behind a double-buffered prediction path.
 """
 from __future__ import annotations
 
@@ -920,11 +922,17 @@ class AMTLEngine(NamedTuple):
     events_per_step
         Step granularity: `event_batch` for the batch/sharded engines,
         1 for dense/delta.
+    num_tasks
+        T, the problem's task count — so session consumers (the
+        learning-while-serving platform in `repro.serve`, examples)
+        can validate task ids / size event streams without carrying
+        the problem alongside the engine.
     """
     init: Callable[[Array, Array], Any]
     run: Callable[[Any, Array | None, int], Any]
     iterate: Callable[[Any], Array]
     events_per_step: int
+    num_tasks: int
 
 
 def make_engine(problem: MTLProblem, cfg: AMTLConfig,
@@ -961,7 +969,7 @@ def make_engine(problem: MTLProblem, cfg: AMTLConfig,
                            int(num_events), mesh)
 
     return AMTLEngine(init=init, run=run, iterate=current_iterate,
-                      events_per_step=per_step)
+                      events_per_step=per_step, num_tasks=num_tasks)
 
 
 def amtl_solve(problem: MTLProblem, cfg: AMTLConfig, v0: Array, key: Array,

@@ -27,6 +27,7 @@ class TaskLoss(NamedTuple):
     value: Callable[[Array, Array, Array], Array]   # (x, y, w) -> scalar
     grad: Callable[[Array, Array, Array], Array]    # (x, y, w) -> (d,)
     lipschitz: Callable[[Array], float]             # (x,) -> L bound
+    predict: Callable[[Array], Array]               # linear score -> output
 
 
 # -- least squares:  ||x w - y||_2^2  (paper Eq. IV.1 uses the unnormalized
@@ -44,6 +45,11 @@ def lstsq_grad(x: Array, y: Array, w: Array) -> Array:
 def lstsq_lipschitz(x: Array) -> float:
     s = np.linalg.svd(np.asarray(x, dtype=np.float64), compute_uv=False)
     return float(2.0 * s[0] ** 2) if s.size else 1.0
+
+
+def lstsq_predict(score: Array) -> Array:
+    """Regression serves the raw linear score x·w."""
+    return score
 
 
 # -- logistic: sum log(1 + exp(-y x w)), y in {-1, +1} ----------------------
@@ -64,10 +70,16 @@ def logistic_lipschitz(x: Array) -> float:
     return float(0.25 * s[0] ** 2) if s.size else 1.0
 
 
+def logistic_predict(score: Array) -> Array:
+    """Classification serves P(y = +1) = sigmoid(x·w)."""
+    return jax.nn.sigmoid(score)
+
+
 LOSSES: dict[str, TaskLoss] = {
-    "lstsq": TaskLoss("lstsq", lstsq_value, lstsq_grad, lstsq_lipschitz),
+    "lstsq": TaskLoss("lstsq", lstsq_value, lstsq_grad, lstsq_lipschitz,
+                      lstsq_predict),
     "logistic": TaskLoss("logistic", logistic_value, logistic_grad,
-                         logistic_lipschitz),
+                         logistic_lipschitz, logistic_predict),
 }
 
 

@@ -1,0 +1,13 @@
+"""Online learning-while-serving subsystem (the paper's deployment story).
+
+A central `AMTLServer` keeps an `AMTLEngine` session learning from
+asynchronously streamed task feedback while serving predictions off a
+double-buffered live iterate.  The double-buffer equivalence contract —
+frozen serving is bitwise the frozen engine, feedback-driven serving is
+bitwise a plain `engine.run` over the same coalesced chunks, and a
+checkpoint restart is invisible to subsequent predictions — is
+documented in `repro.serve.server` and enforced by tests/test_serve.py.
+"""
+from repro.serve.server import (AMTLServer, FeedbackReceipt, ServeConfig)
+
+__all__ = ["AMTLServer", "FeedbackReceipt", "ServeConfig"]

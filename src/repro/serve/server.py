@@ -1,0 +1,363 @@
+"""Learning-while-serving platform over the AMTL session API.
+
+`AMTLServer` holds a long-lived `AMTLEngine` (`core.amtl.make_engine`) —
+the paper's central server, kept learning while task nodes stream events
+at it — and splits its two duties onto two paths:
+
+  * request path — `predict(task_ids, features)` micro-batches incoming
+    (task_id, features) rows (bucketed padding, so distinct batch sizes
+    reuse a handful of jit traces) and scores them off the
+    DOUBLE-BUFFERED live iterate.
+  * feedback path — `submit_feedback(task_ids)` enqueues labeled
+    feedback; `step()` coalesces the queue into ONE engine chunk (a
+    multiple of `engine.events_per_step`), advances the session with
+    `engine.run`, and swaps the serving buffer at the chunk boundary.
+
+Double-buffer equivalence contract (tests/test_serve.py):
+
+  * The serving buffer is always a COMMITTED (fully materialized)
+    snapshot of `engine.iterate(state)`; it swaps only at chunk
+    boundaries, so a prediction never waits on an in-flight `run` chunk
+    or the server prox refresh inside it.
+  * Zero feedback: the served iterate is BITWISE
+    `engine.iterate(engine.init(v0, key))` — a frozen server serves
+    exactly the frozen engine.
+  * With feedback: after any sequence of `step()` boundaries the engine
+    state is BITWISE `engine.run(engine.init(v0, key), offs, sum(chunks))`
+    over the same coalesced chunk sizes (`run` composes bitwise at any
+    step boundary — the PR-4 session contract), and the serving buffer
+    is the iterate of that state.
+  * Restart: `AMTLServer.resume(...)` from a rotated checkpoint
+    (`repro.checkpoint.save(..., keep_last=k)`) is invisible to
+    subsequent predictions — the restored server serves bitwise what the
+    uninterrupted one would (pending, not-yet-run feedback is the one
+    thing a crash loses; clients re-submit, the standard at-most-once
+    queue contract).
+
+Per-task admission/QoS (`max_pending_per_task`, `task_chunk_quota`)
+bounds what one bursty task can inject: excess queue depth is rejected
+at admission, and each chunk consumes at most `task_chunk_quota` events
+per task — drained round-robin from a rotating start offset — so a
+flood on one task can neither evict other tasks' pending feedback nor
+starve the per-chunk event budget.  Coalescing is deterministic (pure
+function of the queue contents), which is what makes the chunk-replay
+contract above testable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.core.amtl import AMTLConfig, make_engine
+from repro.core.losses import MTLProblem, get_loss
+
+Array = jax.Array
+
+
+class ServeConfig(NamedTuple):
+    """Serving-side knobs (the engine itself is configured by AMTLConfig).
+
+    chunk_events         per-chunk event budget: at most this many engine
+                         events are coalesced per `step()` (must be a
+                         positive multiple of `engine.events_per_step`).
+    task_chunk_quota     QoS: max events ONE task contributes to a chunk
+                         (None = no per-task cap, the budget still caps
+                         the chunk).  Drained round-robin from a rotating
+                         offset so tied tasks alternate priority.
+    max_pending_per_task admission: feedback beyond this per-task queue
+                         depth is rejected at `submit_feedback` (None =
+                         unbounded queue).
+    learning             False freezes the server: feedback is rejected
+                         and `step()` is a no-op — the served iterate
+                         stays bitwise `engine.iterate(init_state)`.
+    ckpt_dir             checkpoint directory (None disables checkpoints).
+    checkpoint_every     auto-checkpoint after this many learned events
+                         (None = only explicit `checkpoint()` calls).
+    keep_last            rotation: keep only the k newest `step_*.npz`
+                         records (repro.checkpoint.save semantics).
+    max_batch            predict micro-batch ceiling: larger request
+                         batches are served in `max_batch` slices;
+                         smaller ones are padded to the next power of
+                         two, bounding the number of jit traces.
+    """
+    chunk_events: int = 32
+    task_chunk_quota: Optional[int] = None
+    max_pending_per_task: Optional[int] = None
+    learning: bool = True
+    ckpt_dir: Optional[str] = None
+    checkpoint_every: Optional[int] = None
+    keep_last: Optional[int] = None
+    max_batch: int = 256
+
+
+class FeedbackReceipt(NamedTuple):
+    accepted: int          # enqueued for a future chunk
+    rejected: int          # admission-capped (or server frozen)
+
+
+@functools.partial(jax.jit, static_argnames=("loss_name",))
+def _predict_scores(v: Array, task_ids: Array, x: Array,
+                    loss_name: str) -> Array:
+    """Row scores off the served iterate: loss-specific link of x_i·v[:, t_i]."""
+    cols = v[:, task_ids].T                       # (B, d)
+    return get_loss(loss_name).predict(jnp.sum(x * cols, axis=-1))
+
+
+def _bucket(n: int, cap: int) -> int:
+    m = 1
+    while m < n:
+        m <<= 1
+    return min(m, cap)
+
+
+class AMTLServer:
+    """A long-lived learning-while-serving AMTL session (see module doc)."""
+
+    def __init__(self, problem: MTLProblem, cfg: AMTLConfig, v0: Array,
+                 key: Array, serve_cfg: ServeConfig = ServeConfig(), *,
+                 mesh=None, delay_offsets: Array | None = None):
+        self.problem = problem
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        self.engine = make_engine(problem, cfg, mesh)
+        per = self.engine.events_per_step
+        if serve_cfg.chunk_events < per \
+                or serve_cfg.chunk_events % per != 0:
+            raise ValueError(
+                f"chunk_events ({serve_cfg.chunk_events}) must be a "
+                f"positive multiple of the engine's events_per_step "
+                f"({per}) so every coalesced chunk is runnable")
+        if serve_cfg.task_chunk_quota is not None \
+                and serve_cfg.task_chunk_quota < 1:
+            raise ValueError(
+                f"task_chunk_quota must be >= 1 or None, got "
+                f"{serve_cfg.task_chunk_quota}")
+        if serve_cfg.max_pending_per_task is not None \
+                and serve_cfg.max_pending_per_task < 1:
+            raise ValueError(
+                f"max_pending_per_task must be >= 1 or None, got "
+                f"{serve_cfg.max_pending_per_task}")
+        if serve_cfg.checkpoint_every is not None \
+                and serve_cfg.ckpt_dir is None:
+            raise ValueError("checkpoint_every is set but ckpt_dir is None "
+                             "— there is nowhere to write the checkpoints")
+        if serve_cfg.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got "
+                             f"{serve_cfg.max_batch}")
+        self._delay_offsets = delay_offsets
+        self._state = self.engine.init(v0, key)
+        self._pending = np.zeros(problem.num_tasks, np.int64)
+        self._rr = 0                       # rotating round-robin offset
+        self.chunk_log: list[int] = []     # coalesced chunk sizes, in order
+        # Double buffer: predictions read _buf[_front], which is only ever
+        # reassigned at a chunk boundary after the new iterate has fully
+        # materialized — never an in-flight value.
+        front = jax.block_until_ready(self.engine.iterate(self._state))
+        self._buf: list[Array] = [front, front]
+        self._front = 0
+        self._events_since_ckpt = 0
+        self._n_requests = 0
+        self._n_predictions = 0
+        self._n_rejected = 0
+
+    # ------------------------------------------------------- request path
+    def predict(self, task_ids, features) -> Array:
+        """Score a micro-batch of (task_id, features) rows.
+
+        Served off the committed front buffer: never blocks on a running
+        chunk or prox refresh.  Batches above `max_batch` are served in
+        slices; smaller ones pad to the next power of two (same trace).
+        """
+        t = np.asarray(task_ids, np.int32).reshape(-1)
+        x = jnp.asarray(features)
+        if x.ndim != 2 or x.shape[0] != t.shape[0] \
+                or x.shape[1] != self.problem.dim:
+            raise ValueError(
+                f"features must be (len(task_ids), d) = "
+                f"({t.shape[0]}, {self.problem.dim}), got {x.shape}")
+        if t.size and (t.min() < 0 or t.max() >= self.problem.num_tasks):
+            raise ValueError(
+                f"task_ids must be in [0, {self.problem.num_tasks}), got "
+                f"range [{t.min()}, {t.max()}]")
+        v = self._buf[self._front]
+        cap = self.serve_cfg.max_batch
+        outs = []
+        for lo in range(0, t.shape[0], cap):
+            ts = t[lo:lo + cap]
+            xs = x[lo:lo + cap]
+            m = _bucket(ts.shape[0], cap)
+            pad = m - ts.shape[0]
+            if pad:
+                ts = np.pad(ts, (0, pad))
+                xs = jnp.pad(xs, ((0, pad), (0, 0)))
+            scores = _predict_scores(v, jnp.asarray(ts), xs,
+                                     self.problem.loss_name)
+            outs.append(scores[:m - pad] if pad else scores)
+        self._n_requests += 1
+        self._n_predictions += int(t.shape[0])
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+
+    def iterate(self) -> Array:
+        """The committed serving buffer (the front of the double buffer)."""
+        return self._buf[self._front]
+
+    # ------------------------------------------------------ feedback path
+    def submit_feedback(self, task_ids) -> FeedbackReceipt:
+        """Enqueue labeled feedback; each accepted item is one future
+        engine event.  Rejected = admission cap hit (or server frozen)."""
+        t = np.asarray(task_ids, np.int64).reshape(-1)
+        if t.size and (t.min() < 0 or t.max() >= self.problem.num_tasks):
+            raise ValueError(
+                f"feedback task_ids must be in "
+                f"[0, {self.problem.num_tasks}), got range "
+                f"[{t.min()}, {t.max()}]")
+        if not self.serve_cfg.learning:
+            self._n_rejected += t.size
+            return FeedbackReceipt(0, int(t.size))
+        cap = self.serve_cfg.max_pending_per_task
+        accepted = rejected = 0
+        for ti in t:
+            if cap is not None and self._pending[ti] >= cap:
+                rejected += 1
+            else:
+                self._pending[ti] += 1
+                accepted += 1
+        self._n_rejected += rejected
+        return FeedbackReceipt(accepted, rejected)
+
+    def _coalesce(self) -> int:
+        """Drain the feedback queue into one runnable chunk size.
+
+        Round-robin over tasks from the rotating offset, at most
+        `task_chunk_quota` events per task, at most `chunk_events`
+        total, floored to a multiple of `events_per_step` (the floored
+        remainder goes back to the queue, reverse consumption order).
+        Deterministic in the queue contents.
+        """
+        per = self.engine.events_per_step
+        budget = self.serve_cfg.chunk_events
+        quota = self.serve_cfg.task_chunk_quota
+        quota = budget if quota is None else quota
+        num_tasks = self.problem.num_tasks
+        order = [(self._rr + i) % num_tasks for i in range(num_tasks)]
+        taken = np.zeros(num_tasks, np.int64)
+        total = 0
+        for ti in order:
+            if total >= budget:
+                break
+            k = min(int(self._pending[ti]), quota, budget - total)
+            if k > 0:
+                taken[ti] = k
+                total += k
+        give_back = total - (total // per) * per
+        for ti in reversed(order):
+            if give_back == 0:
+                break
+            k = min(int(taken[ti]), give_back)
+            taken[ti] -= k
+            give_back -= k
+        self._pending -= taken
+        if taken.any():
+            self._rr = (self._rr + 1) % num_tasks
+        return int(taken.sum())
+
+    def step(self) -> int:
+        """One chunk boundary: coalesce -> `engine.run` -> buffer swap.
+
+        Returns the number of events learned (0 if frozen or nothing
+        runnable yet).  This is the ONLY place the serving buffer swaps,
+        and the swap happens after the new iterate fully materializes —
+        the front buffer a concurrent `predict` reads is never
+        in-flight.  Auto-checkpoints on the `checkpoint_every` cadence.
+        """
+        if not self.serve_cfg.learning:
+            return 0
+        n = self._coalesce()
+        if n == 0:
+            return 0
+        self._state = self.engine.run(self._state, self._delay_offsets, n)
+        self.chunk_log.append(n)
+        back = 1 - self._front
+        self._buf[back] = jax.block_until_ready(
+            self.engine.iterate(self._state))
+        self._front = back
+        self._events_since_ckpt += n
+        every = self.serve_cfg.checkpoint_every
+        if every is not None and self._events_since_ckpt >= every:
+            self.checkpoint()
+        return n
+
+    def serve(self, task_ids, features, feedback_task_ids=None):
+        """One request batch: predict, enqueue feedback, run one chunk.
+
+        Predictions are scored against the CURRENT committed buffer
+        before the chunk runs — this batch's feedback affects the NEXT
+        batch's predictions, which is what lets the request path never
+        block on learning.  Returns (predictions, FeedbackReceipt,
+        events_learned).
+        """
+        preds = self.predict(task_ids, features)
+        receipt = FeedbackReceipt(0, 0)
+        if feedback_task_ids is not None:
+            receipt = self.submit_feedback(feedback_task_ids)
+        ran = self.step()
+        return preds, receipt, ran
+
+    # ------------------------------------------------- checkpoint/restart
+    def checkpoint(self) -> Optional[str]:
+        """Write the engine state as `step_<event>.npz`, rotated to
+        `keep_last`.  Returns the written path (None if no ckpt_dir)."""
+        if self.serve_cfg.ckpt_dir is None:
+            return None
+        path = checkpoint.save(self.serve_cfg.ckpt_dir,
+                               int(self._state.event), self._state,
+                               keep_last=self.serve_cfg.keep_last)
+        self._events_since_ckpt = 0
+        return path
+
+    @classmethod
+    def resume(cls, problem: MTLProblem, cfg: AMTLConfig, v0: Array,
+               key: Array, serve_cfg: ServeConfig = ServeConfig(), *,
+               mesh=None, delay_offsets: Array | None = None) -> "AMTLServer":
+        """Restart-transparent construction: restore the newest rotated
+        checkpoint in `serve_cfg.ckpt_dir` if one exists, else a fresh
+        `engine.init(v0, key)` session.  The restored server's serving
+        buffer — and therefore every subsequent prediction — is bitwise
+        the uninterrupted server's at the same chunk boundary."""
+        server = cls(problem, cfg, v0, key, serve_cfg, mesh=mesh,
+                     delay_offsets=delay_offsets)
+        d = serve_cfg.ckpt_dir
+        step = checkpoint.latest_step(d) if d is not None else None
+        if step is not None:
+            server._state = checkpoint.restore(
+                d, step, like=server.engine.init(v0, key))
+            back = 1 - server._front
+            server._buf[back] = jax.block_until_ready(
+                server.engine.iterate(server._state))
+            server._front = back
+        return server
+
+    # ---------------------------------------------------------- telemetry
+    @property
+    def event_count(self) -> int:
+        return int(self._state.event)
+
+    @property
+    def pending_feedback(self) -> int:
+        return int(self._pending.sum())
+
+    def stats(self) -> dict[str, Any]:
+        return {
+            "requests": self._n_requests,
+            "predictions": self._n_predictions,
+            "events": self.event_count,
+            "chunks": len(self.chunk_log),
+            "pending_feedback": self.pending_feedback,
+            "rejected_feedback": self._n_rejected,
+            "learning": self.serve_cfg.learning,
+        }

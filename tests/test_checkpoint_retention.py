@@ -83,6 +83,36 @@ def test_keep_last_ignores_foreign_files(tmp_path):
     assert (tmp_path / "step_zzz.npz").exists()
 
 
+def test_keep_last_rotates_mixed_padding_records(tmp_path):
+    """Regression: rotation must remove the FILENAME the regex matched.
+    A record written with different zero padding (step_5.npz) parses to
+    step 5 but re-formatting it as step_00000005.npz points at a file
+    that never existed — the stale record silently survived every
+    rotation while counting against the retention window."""
+    d = str(tmp_path)
+    checkpoint.save(d, 5, _tree(5))
+    os.rename(os.path.join(d, "step_00000005.npz"),
+              os.path.join(d, "step_5.npz"))
+    for s in (6, 7, 8):
+        checkpoint.save(d, s, _tree(s), keep_last=2)
+    assert _steps_on_disk(d) == [7, 8]
+    assert sorted(os.listdir(d)) == ["step_00000007.npz",
+                                     "step_00000008.npz"]
+
+
+def test_keep_last_same_step_other_padding_is_rotatable(tmp_path):
+    """A differently-padded duplicate of the step being saved is a stale
+    record like any other: only the file `save` just wrote is exempt
+    from rotation."""
+    d = str(tmp_path)
+    checkpoint.save(d, 3, _tree(3))
+    os.rename(os.path.join(d, "step_00000003.npz"),
+              os.path.join(d, "step_3.npz"))
+    path = checkpoint.save(d, 3, _tree(3), keep_last=1)
+    assert os.path.exists(path)
+    assert os.listdir(d) == ["step_00000003.npz"]
+
+
 def test_keep_last_validates(tmp_path):
     with pytest.raises(ValueError, match="keep_last must be >= 1"):
         checkpoint.save(str(tmp_path), 0, _tree(0), keep_last=0)
