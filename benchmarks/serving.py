@@ -1,12 +1,16 @@
 """Learn-while-serve throughput bench: the `serving` telemetry row.
 
 Measures the `AMTLServer` request path at a serving-shaped scale
-(d=1024, T=32): requests/sec with learning ON (every request batch also
-submits feedback and runs one coalesced engine chunk) vs FROZEN (same
-traffic, learning off — the pure double-buffer read path), plus p50/p95
-per-batch predict latency on the learning path.  Every timer read sits
-behind `jax.block_until_ready` — the wall-clock numbers measure compute,
-not async dispatch.
+(d=1024, T=32) in three modes: learning ON cooperatively (every request
+batch also submits feedback and runs one coalesced engine chunk),
+FROZEN (same traffic, learning off — the pure snapshot read path), and
+THREADED (PR 8: the background learner thread absorbs the same feedback
+stream concurrently while the main thread hammers predicts — the
+request path never takes the learner's lock).  Per-batch predict
+latency is recorded on the learning paths (p50/p95 cooperative,
+p99 + SLO-violation count threaded, via the `slo_ms` admission
+controller).  Every timer read sits behind `jax.block_until_ready` —
+the wall-clock numbers measure compute, not async dispatch.
 
 The row is MERGED into `BENCH_amtl_events.json` under the key
 `"serving"` (the engine rows written by `benchmarks.amtl_events` are
@@ -14,17 +18,21 @@ left untouched, and that bench preserves this row when it rewrites the
 file), so one tracked record carries both the engine and the serving
 trajectories across PRs.  Keys:
 
-    requests_per_sec_learning   rows served/sec, feedback+learning on
+    requests_per_sec_learning   rows served/sec, cooperative learning on
     requests_per_sec_frozen     rows served/sec, frozen server
+    requests_per_sec_threaded   rows served/sec, learner thread hot
     predict_p50_ms              median per-batch predict latency (ms)
     predict_p95_ms              95th-pct per-batch predict latency (ms)
+    predict_p99_ms              99th-pct latency on the threaded path
+    slo_violations              threaded predict batches over slo_ms
     events_per_sec_learning     engine events absorbed/sec while serving
     learning_slowdown           frozen/learning requests/sec ratio
-    config                      problem + traffic shape
+    config                      problem + traffic shape (incl. slo_ms)
 
 Serving equivalence (frozen == frozen engine bitwise, learning == plain
-`run` over the same chunks bitwise) is covered by tests/test_serve.py,
-not timed here.
+`run` over the same chunks bitwise, threaded snapshots == committed
+chunk-boundary iterates) is covered by tests/test_serve.py and
+tests/test_serve_threaded.py, not timed here.
 """
 from __future__ import annotations
 
@@ -45,6 +53,7 @@ CHUNK_EVENTS = 32          # per-chunk coalescing budget (4 batches)
 BATCH_REQ = 64             # prediction rows per request batch
 FEEDBACK_PER_BATCH = 16    # labeled feedback rows per request batch
 N_BATCHES = 32             # request batches per timed rep
+SLO_MS = 250.0             # generous predict SLO for the threaded row
 JSON_PATH = "BENCH_amtl_events.json"
 
 
@@ -71,11 +80,13 @@ def _traffic(problem: MTLProblem, seed: int = 0):
     return t, x, fb
 
 
-def _server(problem: MTLProblem, learning: bool) -> AMTLServer:
+def _server(problem: MTLProblem, learning: bool,
+            slo_ms: float | None = None) -> AMTLServer:
     w0 = jnp.zeros((problem.dim, problem.num_tasks), jnp.float32)
     return AMTLServer(problem, _cfg(), w0, jax.random.PRNGKey(7),
                       ServeConfig(chunk_events=CHUNK_EVENTS,
-                                  learning=learning, max_batch=BATCH_REQ))
+                                  learning=learning, max_batch=BATCH_REQ,
+                                  slo_ms=slo_ms))
 
 
 def _drive(problem: MTLProblem, learning: bool):
@@ -98,6 +109,29 @@ def _drive(problem: MTLProblem, learning: bool):
     return total, lat_ms, events
 
 
+def _drive_threaded(problem: MTLProblem):
+    """Same traffic with the learner thread hot: the main thread serves
+    every request batch and enqueues feedback; the background learner
+    coalesces/runs chunks concurrently under the SLO controller.
+    Returns (wall secs of the serving loop, per-batch ms, SLO
+    violations, events learned)."""
+    server = _server(problem, learning=True, slo_ms=SLO_MS)
+    t, x, fb = _traffic(problem)
+    server.start_learner()
+    lat_ms = []
+    t0 = time.perf_counter()
+    for i in range(N_BATCHES):
+        tb = time.perf_counter()
+        preds = server.predict(t[i], x[i])
+        jax.block_until_ready(preds)
+        lat_ms.append(1e3 * (time.perf_counter() - tb))
+        server.submit_feedback(fb[i])
+    total = time.perf_counter() - t0      # serving loop only, not drain
+    events = server.stop_learner(drain=True)
+    violations = server.stats()["slo"]["violations"]
+    return total, lat_ms, violations, events
+
+
 def run(repeats: int = 3) -> list[Row]:
     problem = _problem()
     # warm-up: compile predict (both padded shapes are the same bucket),
@@ -107,20 +141,29 @@ def run(repeats: int = 3) -> list[Row]:
 
     n_requests = N_BATCHES * BATCH_REQ
     best_learn, best_frozen = float("inf"), float("inf")
+    best_thread = float("inf")
     lat_ms, events = [], 0
+    lat_thread, violations = [], 0
     for _ in range(repeats):
         total, lat, ev = _drive(problem, learning=True)
         if total < best_learn:
             best_learn, lat_ms, events = total, lat, ev
         best_frozen = min(best_frozen, _drive(problem, learning=False)[0])
+        total, lat, viol, _ = _drive_threaded(problem)
+        if total < best_thread:
+            best_thread, lat_thread, violations = total, lat, viol
 
     rps_learn = n_requests / best_learn
     rps_frozen = n_requests / best_frozen
+    rps_thread = n_requests / best_thread
     row = {
         "requests_per_sec_learning": rps_learn,
         "requests_per_sec_frozen": rps_frozen,
+        "requests_per_sec_threaded": rps_thread,
         "predict_p50_ms": float(np.percentile(lat_ms, 50)),
         "predict_p95_ms": float(np.percentile(lat_ms, 95)),
+        "predict_p99_ms": float(np.percentile(lat_thread, 99)),
+        "slo_violations": int(violations),
         "events_per_sec_learning": events / best_learn,
         "learning_slowdown": rps_frozen / max(rps_learn, 1e-12),
         "config": {"d": D_S, "T": T_S, "n_samples": N_S, "tau": TAU_S,
@@ -129,6 +172,7 @@ def run(repeats: int = 3) -> list[Row]:
                    "batch_requests": BATCH_REQ,
                    "feedback_per_batch": FEEDBACK_PER_BATCH,
                    "n_batches": N_BATCHES,
+                   "slo_ms": SLO_MS,
                    "backend": jax.default_backend()},
     }
     try:
@@ -146,6 +190,9 @@ def run(repeats: int = 3) -> list[Row]:
         Row("serving/requests_frozen", 1e6 / rps_frozen,
             f"req/sec={rps_frozen:.1f} "
             f"slowdown_learning={row['learning_slowdown']:.2f}x"),
+        Row("serving/requests_threaded", 1e6 / rps_thread,
+            f"req/sec={rps_thread:.1f} p99={row['predict_p99_ms']:.2f}ms "
+            f"slo_violations={violations}"),
         Row("serving/predict_latency", 1e3 * row["predict_p50_ms"],
             f"p50={row['predict_p50_ms']:.2f}ms "
             f"p95={row['predict_p95_ms']:.2f}ms batch={BATCH_REQ}"),

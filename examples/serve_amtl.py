@@ -3,13 +3,17 @@
     PYTHONPATH=src python examples/serve_amtl.py
 
 Streams request batches through an `AMTLServer`: every batch is scored
-off the double-buffered live iterate (predictions never wait on a
+off the committed serving snapshot (predictions never wait on a
 learning chunk), labeled feedback is coalesced into engine chunks under
 per-task QoS caps, and the session checkpoints on a rotating
 `keep_last` window.  Midway, the server "crashes" and is resumed from
 the newest rotated checkpoint — the restart is bitwise invisible to
 every subsequent prediction, which is the serving platform's core
-contract (see `repro.serve`).
+contract (see `repro.serve`).  A final part moves the chunk loop onto
+the background learner thread (PR 8) with a latency SLO: predictions
+flow from the main thread while the learner absorbs feedback
+concurrently, and after the drain the session state is still bitwise
+ONE plain `engine.run` over the coalesced chunk log.
 """
 import os
 import tempfile
@@ -91,8 +95,30 @@ def main():
         stats = server.stats()
         print(f"[stats] {stats}")
         assert stats["events"] == ref.stats()["events"]
-    print("OK: learning-while-serving with QoS, rotating checkpoints, and "
-          "a restart-transparent resume.")
+
+        # -- threaded serving: the learner thread owns the chunk loop --
+        from repro.core import make_engine
+        start_event = server.event_count
+        chunks_before = len(server.chunk_log)
+        learner = server.start_learner()
+        for i in range(BATCHES):
+            server.predict(t[i % BATCHES], x[i % BATCHES])
+            server.submit_feedback(fb[i % BATCHES])
+        server.stop_learner(drain=True)   # finish every runnable chunk
+        new_chunks = server.chunk_log[chunks_before:]
+        print(f"[thread] learner absorbed {learner.events} events in "
+              f"{learner.chunks} chunks while the main thread served")
+        # replay law: the threaded session (including everything learned
+        # before the crash) is bitwise ONE plain run over every event —
+        # chunks compose bitwise at any boundary, threaded or not
+        assert server.event_count == start_event + sum(new_chunks)
+        eng = make_engine(problem, cfg)
+        state = eng.run(eng.init(w0, key), None, server.event_count)
+        assert np.array_equal(np.asarray(server.iterate()),
+                              np.asarray(eng.iterate(state))), \
+            "threaded serving must replay the chunk log bitwise"
+    print("OK: learning-while-serving with QoS, rotating checkpoints, a "
+          "restart-transparent resume, and a concurrent learner thread.")
 
 
 if __name__ == "__main__":

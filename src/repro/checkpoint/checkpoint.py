@@ -79,9 +79,33 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _resolve_step_path(ckpt_dir: str, step: int) -> str:
+    """The on-disk filename for `step`, whatever its zero padding.
+
+    `latest_step` parses ANY `step_(\\d+).npz` record, so `restore`
+    must accept the same set: re-formatting the parsed step as
+    `step_{step:08d}.npz` raised FileNotFoundError on a record written
+    with different padding (e.g. `step_5.npz`) — a directory the
+    rotation path deliberately tolerates.  Prefers the canonically
+    padded name on ties (it is the one `save` writes), then the
+    lexicographically first match for determinism; a step with no
+    record at all resolves to the canonical name so the caller's
+    FileNotFoundError names the expected file.
+    """
+    padded = f"step_{step:08d}.npz"
+    if os.path.isdir(ckpt_dir):
+        matches = sorted(
+            f for f in os.listdir(ckpt_dir)
+            if (m := re.match(r"step_(\d+)\.npz$", f))
+            and int(m.group(1)) == step)
+        if matches and padded not in matches:
+            return os.path.join(ckpt_dir, matches[0])
+    return os.path.join(ckpt_dir, padded)
+
+
 def restore(ckpt_dir: str, step: int, like: Any,
             shardings: Any = None) -> Any:
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    path = _resolve_step_path(ckpt_dir, step)
     data = np.load(path)
     flat_like = jax.tree_util.tree_flatten_with_path(like)
     want_keys = [_SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))

@@ -1,13 +1,24 @@
 """Online learning-while-serving subsystem (the paper's deployment story).
 
-A central `AMTLServer` keeps an `AMTLEngine` session learning from
-asynchronously streamed task feedback while serving predictions off a
-double-buffered live iterate.  The double-buffer equivalence contract —
-frozen serving is bitwise the frozen engine, feedback-driven serving is
-bitwise a plain `engine.run` over the same coalesced chunks, and a
-checkpoint restart is invisible to subsequent predictions — is
-documented in `repro.serve.server` and enforced by tests/test_serve.py.
+A central `AMTLServer` (`serve.server`) keeps an `AMTLEngine` session
+learning from asynchronously streamed task feedback while serving
+predictions off a committed, atomically-flipped serving snapshot.  The
+chunk runner lives on a background learner thread (`serve.learner`,
+start/stop/drain lifecycle) and a latency-SLO admission controller
+(`serve.admission`) deterministically trades the chunk budget against
+the request path's p95.  The equivalence contract — frozen serving is
+bitwise the frozen engine, feedback-driven serving is bitwise a plain
+`engine.run` over the same coalesced chunks (cooperative or threaded),
+and a checkpoint restart is invisible to subsequent predictions — is
+documented in `repro.serve.server` and enforced by tests/test_serve.py
+and tests/test_serve_threaded.py.
 """
-from repro.serve.server import (AMTLServer, FeedbackReceipt, ServeConfig)
+from repro.serve.admission import (LatencySLOController, SLODecision,
+                                   degraded_budget)
+from repro.serve.learner import BackgroundLearner
+from repro.serve.server import (AMTLServer, FeedbackReceipt, ServeConfig,
+                                ServingSnapshot)
 
-__all__ = ["AMTLServer", "FeedbackReceipt", "ServeConfig"]
+__all__ = ["AMTLServer", "FeedbackReceipt", "ServeConfig",
+           "ServingSnapshot", "BackgroundLearner", "LatencySLOController",
+           "SLODecision", "degraded_budget"]

@@ -1,0 +1,119 @@
+"""Background learner thread for `AMTLServer` — the concurrent chunk
+runner.
+
+The cooperative server interleaves `predict` and `step()` on one
+thread, so every coalesce -> `engine.run` -> materialize chunk (and the
+server-prox refresh inside it) stalls the request path — exactly the
+blocking the asynchronous framework exists to avoid.  `BackgroundLearner`
+moves that loop onto its own daemon thread:
+
+  * loop: run one chunk via `AMTLServer._step_once()` (coalesce,
+    `engine.run`, materialize the new iterate, atomic snapshot flip,
+    auto-checkpoint cadence — all under the server's state lock, which
+    the request path never takes);
+  * idle: when the queue has no runnable chunk, park on a wake event
+    that `submit_feedback` sets — no spin, sub-ms reaction to new
+    feedback (a short timeout re-polls so a floored remainder that
+    becomes runnable is never missed);
+  * lifecycle: `start()` / `stop(drain=...)`.  `stop(drain=True)`
+    keeps running chunks until the queue cannot produce another
+    runnable chunk, then joins — with no concurrent submissions, the
+    drained chunk log is exactly the cooperative `while step(): pass`
+    loop's (coalescing is deterministic in the queue contents), which
+    is the thread-vs-cooperative bitwise contract
+    tests/test_serve_threaded.py pins down;
+  * failure: an exception on the learner thread is captured, the
+    thread exits (the server keeps serving the last committed
+    snapshot), and the exception is re-raised on `stop()`/`join()` —
+    a dead learner is never silent.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+
+class BackgroundLearner:
+    """Owns the learner thread of one `AMTLServer` (see module doc)."""
+
+    def __init__(self, server, *, idle_wait_s: float = 0.002,
+                 name: str = "amtl-learner"):
+        self._server = server
+        self._idle_wait_s = float(idle_wait_s)
+        self._name = name
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+        self._draining = False
+        self._exc: Optional[BaseException] = None
+        self.chunks = 0     # chunks run on this thread
+        self.events = 0     # events learned on this thread
+
+    # ---------------------------------------------------------- lifecycle
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> None:
+        if self.running:
+            raise RuntimeError("learner thread is already running")
+        self._maybe_reraise()
+        self._stop.clear()
+        self._wake.clear()
+        self._draining = False
+        self._thread = threading.Thread(
+            target=self._loop, name=self._name, daemon=True)
+        self._thread.start()
+
+    def wake(self) -> None:
+        """Called by `submit_feedback`: new work may be runnable."""
+        self._wake.set()
+
+    def stop(self, drain: bool = True,
+             timeout: Optional[float] = None) -> int:
+        """Stop the thread and join it; returns events learned on it.
+
+        drain=True finishes every runnable chunk first (the queue may
+        still hold a floored, un-runnable remainder — same as the
+        cooperative drain loop).  drain=False exits at the next chunk
+        boundary, leaving the rest queued.  Re-raises any exception the
+        learner thread died with.
+        """
+        self._draining = drain
+        self._stop.set()
+        self._wake.set()
+        return self.join(timeout)
+
+    def join(self, timeout: Optional[float] = None) -> int:
+        """Join the thread (if any) and surface its exception."""
+        if self._thread is not None:
+            self._thread.join(timeout)
+            if self._thread.is_alive():
+                raise TimeoutError(
+                    f"learner thread did not stop within {timeout}s")
+            self._thread = None
+        self._maybe_reraise()
+        return self.events
+
+    def _maybe_reraise(self) -> None:
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
+
+    # --------------------------------------------------------------- loop
+    def _loop(self) -> None:
+        try:
+            while True:
+                if self._stop.is_set() and not self._draining:
+                    break
+                ran = self._server._step_once()
+                if ran:
+                    self.chunks += 1
+                    self.events += ran
+                    continue
+                if self._stop.is_set():
+                    break               # drained: no runnable chunk left
+                self._wake.wait(self._idle_wait_s)
+                self._wake.clear()
+        except BaseException as e:      # surfaced on stop()/join()
+            self._exc = e

@@ -2,50 +2,78 @@
 
 `AMTLServer` holds a long-lived `AMTLEngine` (`core.amtl.make_engine`) —
 the paper's central server, kept learning while task nodes stream events
-at it — and splits its two duties onto two paths:
+at it — and splits its two duties onto two CONCURRENT paths:
 
   * request path — `predict(task_ids, features)` micro-batches incoming
     (task_id, features) rows (bucketed padding, so distinct batch sizes
-    reuse a handful of jit traces) and scores them off the
-    DOUBLE-BUFFERED live iterate.
+    reuse a handful of jit traces) and scores them off the committed
+    serving snapshot.  The snapshot is read with ONE atomic reference
+    load; the request path never takes the learner's state lock, so a
+    prediction never waits on an in-flight `run` chunk or the server
+    prox refresh inside it.
   * feedback path — `submit_feedback(task_ids)` enqueues labeled
-    feedback; `step()` coalesces the queue into ONE engine chunk (a
-    multiple of `engine.events_per_step`), advances the session with
-    `engine.run`, and swaps the serving buffer at the chunk boundary.
+    feedback; the chunk runner (the background learner thread via
+    `start_learner()`, or the cooperative `step()`) coalesces the queue
+    into ONE engine chunk (a multiple of `engine.events_per_step`),
+    advances the session with `engine.run`, and flips the serving
+    snapshot at the chunk boundary.
 
-Double-buffer equivalence contract (tests/test_serve.py):
+Threading model (PR 8; components in `serve.learner` / `serve.admission`):
 
-  * The serving buffer is always a COMMITTED (fully materialized)
-    snapshot of `engine.iterate(state)`; it swaps only at chunk
-    boundaries, so a prediction never waits on an in-flight `run` chunk
-    or the server prox refresh inside it.
+  * State lock (`_state_lock`, learner-side only): serializes
+    coalesce -> `engine.run` -> materialize -> flip, `checkpoint()`, and
+    the cooperative `step()`.  Held for the whole chunk.
+  * Queue lock (`_queue_lock`): guards the pending-feedback counters,
+    shared by `submit_feedback` (any thread) and the coalescer.  Never
+    held across engine work.
+  * Atomic flip: the serving snapshot is an immutable `(iterate, event)`
+    pair reassigned as ONE reference ONLY after
+    `jax.block_until_ready` — a reader sees the old committed snapshot
+    or the new committed snapshot, never a torn or in-flight one.
+  * Lifecycle: `start_learner()` / `stop_learner(drain=...)`; learner
+    exceptions are captured and re-raised on stop/join; the
+    auto-checkpoint cadence runs on the learner thread unchanged.
+
+Double-buffer equivalence contract (tests/test_serve.py,
+tests/test_serve_threaded.py — unchanged from PR 7, now also under a
+concurrent predict load):
+
   * Zero feedback: the served iterate is BITWISE
     `engine.iterate(engine.init(v0, key))` — a frozen server serves
     exactly the frozen engine.
-  * With feedback: after any sequence of `step()` boundaries the engine
-    state is BITWISE `engine.run(engine.init(v0, key), offs, sum(chunks))`
-    over the same coalesced chunk sizes (`run` composes bitwise at any
-    step boundary — the PR-4 session contract), and the serving buffer
-    is the iterate of that state.
-  * Restart: `AMTLServer.resume(...)` from a rotated checkpoint
-    (`repro.checkpoint.save(..., keep_last=k)`) is invisible to
-    subsequent predictions — the restored server serves bitwise what the
-    uninterrupted one would (pending, not-yet-run feedback is the one
-    thing a crash loses; clients re-submit, the standard at-most-once
-    queue contract).
+  * With feedback: after any sequence of chunk boundaries (cooperative
+    OR on the learner thread) the engine state is BITWISE
+    `engine.run(engine.init(v0, key), offs, sum(chunk_log))` over the
+    same coalesced chunk sizes, every served snapshot is bitwise some
+    chunk-boundary `engine.iterate`, and draining the learner with no
+    concurrent submissions reproduces the cooperative `step()` loop's
+    chunk log exactly (coalescing is deterministic in the queue).
+  * Restart: `AMTLServer.resume(...)` from a rotated checkpoint is
+    invisible to subsequent predictions (pending, not-yet-run feedback
+    is the one thing a crash loses; clients re-submit — the standard
+    at-most-once queue contract).
+
+Latency-SLO-driven admission (`ServeConfig.slo_ms`): the request path
+records per-batch predict latency into a `LatencySLOController`
+(`serve.admission`), which deterministically shrinks the admitted chunk
+budget while the rolling p95 violates the SLO and restores it while the
+tail is healthy — the chunk-size trace is a pure function of the
+recorded latency sequence, logged in `stats()["slo"]`.  With
+`slo_shed=True` a degraded controller also sheds NEW feedback at
+admission (predictions always flow).
 
 Per-task admission/QoS (`max_pending_per_task`, `task_chunk_quota`)
 bounds what one bursty task can inject: excess queue depth is rejected
 at admission, and each chunk consumes at most `task_chunk_quota` events
 per task — drained round-robin from a rotating start offset — so a
 flood on one task can neither evict other tasks' pending feedback nor
-starve the per-chunk event budget.  Coalescing is deterministic (pure
-function of the queue contents), which is what makes the chunk-replay
-contract above testable.
+starve the per-chunk event budget.
 """
 from __future__ import annotations
 
 import functools
+import threading
+import time
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -55,6 +83,8 @@ import numpy as np
 from repro import checkpoint
 from repro.core.amtl import AMTLConfig, make_engine
 from repro.core.losses import MTLProblem, get_loss
+from repro.serve.admission import make_controller
+from repro.serve.learner import BackgroundLearner
 
 Array = jax.Array
 
@@ -63,8 +93,10 @@ class ServeConfig(NamedTuple):
     """Serving-side knobs (the engine itself is configured by AMTLConfig).
 
     chunk_events         per-chunk event budget: at most this many engine
-                         events are coalesced per `step()` (must be a
+                         events are coalesced per chunk (must be a
                          positive multiple of `engine.events_per_step`).
+                         With an SLO set this is the level-0 budget the
+                         admission controller degrades from.
     task_chunk_quota     QoS: max events ONE task contributes to a chunk
                          (None = no per-task cap, the budget still caps
                          the chunk).  Drained round-robin from a rotating
@@ -84,6 +116,16 @@ class ServeConfig(NamedTuple):
                          batches are served in `max_batch` slices;
                          smaller ones are padded to the next power of
                          two, bounding the number of jit traces.
+    slo_ms               predict-latency SLO in ms (None disables the
+                         admission controller and latency recording).
+                         When set, `predict` blocks on its scores and
+                         records the per-batch wall latency.
+    slo_window           tumbling-window size (latency samples) between
+                         controller decisions.
+    slo_shed             True: while the controller is degraded, NEW
+                         feedback is shed at admission (rejected) so the
+                         backlog cannot grow against a violated SLO.
+                         Requires slo_ms.
     """
     chunk_events: int = 32
     task_chunk_quota: Optional[int] = None
@@ -93,11 +135,22 @@ class ServeConfig(NamedTuple):
     checkpoint_every: Optional[int] = None
     keep_last: Optional[int] = None
     max_batch: int = 256
+    slo_ms: Optional[float] = None
+    slo_window: int = 32
+    slo_shed: bool = False
 
 
 class FeedbackReceipt(NamedTuple):
     accepted: int          # enqueued for a future chunk
-    rejected: int          # admission-capped (or server frozen)
+    rejected: int          # admission-capped, SLO-shed, or server frozen
+
+
+class ServingSnapshot(NamedTuple):
+    """The committed serving state, flipped as one atomic reference:
+    `v` is a fully-materialized chunk-boundary `engine.iterate`, `event`
+    the engine event count it was committed at."""
+    v: Array
+    event: int
 
 
 @functools.partial(jax.jit, static_argnames=("loss_name",))
@@ -121,6 +174,16 @@ class AMTLServer:
     def __init__(self, problem: MTLProblem, cfg: AMTLConfig, v0: Array,
                  key: Array, serve_cfg: ServeConfig = ServeConfig(), *,
                  mesh=None, delay_offsets: Array | None = None):
+        self._configure(problem, cfg, v0, key, serve_cfg, mesh=mesh,
+                        delay_offsets=delay_offsets)
+        self._install_state(self.engine.init(v0, key))
+
+    def _configure(self, problem: MTLProblem, cfg: AMTLConfig, v0: Array,
+                   key: Array, serve_cfg: ServeConfig, *, mesh=None,
+                   delay_offsets: Array | None = None) -> None:
+        """Everything construction-time except building/serving a state
+        (shared by `__init__` and `resume`, which install different
+        states — the fresh init vs the restored checkpoint)."""
         self.problem = problem
         self.cfg = cfg
         self.serve_cfg = serve_cfg
@@ -149,29 +212,45 @@ class AMTLServer:
         if serve_cfg.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got "
                              f"{serve_cfg.max_batch}")
+        if serve_cfg.slo_shed and serve_cfg.slo_ms is None:
+            raise ValueError("slo_shed requires slo_ms — there is no "
+                             "controller to decide when to shed")
+        self._slo = make_controller(serve_cfg.slo_ms, serve_cfg.chunk_events,
+                                    per, serve_cfg.slo_window)
         self._delay_offsets = delay_offsets
-        self._state = self.engine.init(v0, key)
         self._pending = np.zeros(problem.num_tasks, np.int64)
         self._rr = 0                       # rotating round-robin offset
         self.chunk_log: list[int] = []     # coalesced chunk sizes, in order
-        # Double buffer: predictions read _buf[_front], which is only ever
-        # reassigned at a chunk boundary after the new iterate has fully
-        # materialized — never an in-flight value.
-        front = jax.block_until_ready(self.engine.iterate(self._state))
-        self._buf: list[Array] = [front, front]
-        self._front = 0
+        # Locks, narrowest-scope first (see module doc threading model):
+        # the request path takes NONE of them to read the snapshot.
+        self._state_lock = threading.RLock()   # chunk run / checkpoint
+        self._queue_lock = threading.Lock()    # pending counters + _rr
+        self._stats_lock = threading.Lock()    # request-path counters
+        self._learner: Optional[BackgroundLearner] = None
         self._events_since_ckpt = 0
         self._n_requests = 0
         self._n_predictions = 0
         self._n_rejected = 0
+        self._n_shed = 0
+
+    def _install_state(self, state) -> None:
+        """Serve `state`: materialize its iterate and commit the serving
+        snapshot (the only place besides `_step_once` that flips it)."""
+        self._state = state
+        v = jax.block_until_ready(self.engine.iterate(state))
+        self._serving = ServingSnapshot(v, int(state.event))
 
     # ------------------------------------------------------- request path
     def predict(self, task_ids, features) -> Array:
         """Score a micro-batch of (task_id, features) rows.
 
-        Served off the committed front buffer: never blocks on a running
-        chunk or prox refresh.  Batches above `max_batch` are served in
-        slices; smaller ones pad to the next power of two (same trace).
+        Served off the committed snapshot (one atomic reference read):
+        never blocks on a running chunk or prox refresh, never takes the
+        learner's lock.  Batches above `max_batch` are served in slices;
+        smaller ones pad to the next power of two (same trace).  An
+        empty request batch returns an empty (0,) score array.  With an
+        SLO set, the call blocks on its scores and records the per-batch
+        latency into the admission controller.
         """
         t = np.asarray(task_ids, np.int32).reshape(-1)
         x = jnp.asarray(features)
@@ -184,7 +263,15 @@ class AMTLServer:
             raise ValueError(
                 f"task_ids must be in [0, {self.problem.num_tasks}), got "
                 f"range [{t.min()}, {t.max()}]")
-        v = self._buf[self._front]
+        snap = self._serving                  # ONE atomic reference read
+        with self._stats_lock:
+            self._n_requests += 1
+            self._n_predictions += int(t.shape[0])
+        if t.shape[0] == 0:
+            # the slice loop below never runs — return the empty score
+            # vector in the link's dtype instead of concatenating nothing
+            return jnp.zeros((0,), jnp.result_type(x.dtype, snap.v.dtype))
+        t0 = time.perf_counter() if self._slo is not None else 0.0
         cap = self.serve_cfg.max_batch
         outs = []
         for lo in range(0, t.shape[0], cap):
@@ -195,21 +282,28 @@ class AMTLServer:
             if pad:
                 ts = np.pad(ts, (0, pad))
                 xs = jnp.pad(xs, ((0, pad), (0, 0)))
-            scores = _predict_scores(v, jnp.asarray(ts), xs,
+            scores = _predict_scores(snap.v, jnp.asarray(ts), xs,
                                      self.problem.loss_name)
             outs.append(scores[:m - pad] if pad else scores)
-        self._n_requests += 1
-        self._n_predictions += int(t.shape[0])
-        return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+        out = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+        if self._slo is not None:
+            jax.block_until_ready(out)        # latency = computed scores
+            self._slo.record(1e3 * (time.perf_counter() - t0))
+        return out
 
     def iterate(self) -> Array:
-        """The committed serving buffer (the front of the double buffer)."""
-        return self._buf[self._front]
+        """The committed serving iterate (the snapshot's V)."""
+        return self._serving.v
+
+    def serving(self) -> ServingSnapshot:
+        """The committed `(iterate, event)` snapshot, read atomically."""
+        return self._serving
 
     # ------------------------------------------------------ feedback path
     def submit_feedback(self, task_ids) -> FeedbackReceipt:
         """Enqueue labeled feedback; each accepted item is one future
-        engine event.  Rejected = admission cap hit (or server frozen)."""
+        engine event.  Rejected = admission cap hit, SLO shed, or
+        server frozen.  Thread-safe; wakes a running learner."""
         t = np.asarray(task_ids, np.int64).reshape(-1)
         if t.size and (t.min() < 0 or t.max() >= self.problem.num_tasks):
             raise ValueError(
@@ -217,107 +311,166 @@ class AMTLServer:
                 f"[0, {self.problem.num_tasks}), got range "
                 f"[{t.min()}, {t.max()}]")
         if not self.serve_cfg.learning:
-            self._n_rejected += t.size
+            with self._stats_lock:
+                self._n_rejected += t.size
+            return FeedbackReceipt(0, int(t.size))
+        if self.serve_cfg.slo_shed and self._slo is not None \
+                and self._slo.degraded:
+            with self._stats_lock:
+                self._n_rejected += t.size
+                self._n_shed += t.size
             return FeedbackReceipt(0, int(t.size))
         cap = self.serve_cfg.max_pending_per_task
         accepted = rejected = 0
-        for ti in t:
-            if cap is not None and self._pending[ti] >= cap:
-                rejected += 1
-            else:
-                self._pending[ti] += 1
-                accepted += 1
-        self._n_rejected += rejected
+        with self._queue_lock:
+            for ti in t:
+                if cap is not None and self._pending[ti] >= cap:
+                    rejected += 1
+                else:
+                    self._pending[ti] += 1
+                    accepted += 1
+        with self._stats_lock:
+            self._n_rejected += rejected
+        if accepted and self._learner is not None and self._learner.running:
+            self._learner.wake()
         return FeedbackReceipt(accepted, rejected)
 
     def _coalesce(self) -> int:
         """Drain the feedback queue into one runnable chunk size.
 
         Round-robin over tasks from the rotating offset, at most
-        `task_chunk_quota` events per task, at most `chunk_events`
-        total, floored to a multiple of `events_per_step` (the floored
-        remainder goes back to the queue, reverse consumption order).
-        Deterministic in the queue contents.
+        `task_chunk_quota` events per task, at most the ADMITTED budget
+        (`chunk_events`, degraded by the SLO controller when one is
+        configured) total, floored to a multiple of `events_per_step`
+        (the floored remainder goes back to the queue, reverse
+        consumption order).  Deterministic in the queue contents and
+        the admitted budget.  Called with the state lock held.
         """
         per = self.engine.events_per_step
-        budget = self.serve_cfg.chunk_events
+        budget = (self._slo.chunk_events if self._slo is not None
+                  else self.serve_cfg.chunk_events)
         quota = self.serve_cfg.task_chunk_quota
         quota = budget if quota is None else quota
         num_tasks = self.problem.num_tasks
-        order = [(self._rr + i) % num_tasks for i in range(num_tasks)]
-        taken = np.zeros(num_tasks, np.int64)
-        total = 0
-        for ti in order:
-            if total >= budget:
-                break
-            k = min(int(self._pending[ti]), quota, budget - total)
-            if k > 0:
-                taken[ti] = k
-                total += k
-        give_back = total - (total // per) * per
-        for ti in reversed(order):
-            if give_back == 0:
-                break
-            k = min(int(taken[ti]), give_back)
-            taken[ti] -= k
-            give_back -= k
-        self._pending -= taken
-        if taken.any():
-            self._rr = (self._rr + 1) % num_tasks
+        with self._queue_lock:
+            order = [(self._rr + i) % num_tasks for i in range(num_tasks)]
+            taken = np.zeros(num_tasks, np.int64)
+            total = 0
+            for ti in order:
+                if total >= budget:
+                    break
+                k = min(int(self._pending[ti]), quota, budget - total)
+                if k > 0:
+                    taken[ti] = k
+                    total += k
+            give_back = total - (total // per) * per
+            for ti in reversed(order):
+                if give_back == 0:
+                    break
+                k = min(int(taken[ti]), give_back)
+                taken[ti] -= k
+                give_back -= k
+            self._pending -= taken
+            if taken.any():
+                self._rr = (self._rr + 1) % num_tasks
         return int(taken.sum())
 
+    def _step_once(self) -> int:
+        """One chunk boundary: coalesce -> `engine.run` -> atomic flip.
+
+        The engine-side critical section (state lock): the serving
+        snapshot is reassigned as ONE reference only after the new
+        iterate fully materializes, so a concurrent `predict` reads
+        either the previous or the new committed snapshot — never an
+        in-flight one.  Auto-checkpoints on the `checkpoint_every`
+        cadence.  Runs on the learner thread, or inline via `step()`.
+        """
+        with self._state_lock:
+            n = self._coalesce()
+            if n == 0:
+                return 0
+            state = self.engine.run(self._state, self._delay_offsets, n)
+            v = jax.block_until_ready(self.engine.iterate(state))
+            self._state = state
+            self.chunk_log.append(n)
+            self._serving = ServingSnapshot(v, int(state.event))  # the flip
+            self._events_since_ckpt += n
+            every = self.serve_cfg.checkpoint_every
+            if every is not None and self._events_since_ckpt >= every:
+                self.checkpoint()
+            return n
+
     def step(self) -> int:
-        """One chunk boundary: coalesce -> `engine.run` -> buffer swap.
+        """Cooperative chunk boundary (single-threaded callers).
 
         Returns the number of events learned (0 if frozen or nothing
-        runnable yet).  This is the ONLY place the serving buffer swaps,
-        and the swap happens after the new iterate fully materializes —
-        the front buffer a concurrent `predict` reads is never
-        in-flight.  Auto-checkpoints on the `checkpoint_every` cadence.
+        runnable yet).  While the background learner is running, chunks
+        belong to it — call `stop_learner()` first.
         """
         if not self.serve_cfg.learning:
             return 0
-        n = self._coalesce()
-        if n == 0:
+        if self.learner_running:
+            raise RuntimeError(
+                "the background learner owns the chunk loop; call "
+                "stop_learner() before stepping cooperatively")
+        return self._step_once()
+
+    # ------------------------------------------------- learner lifecycle
+    @property
+    def learner_running(self) -> bool:
+        return self._learner is not None and self._learner.running
+
+    def start_learner(self) -> BackgroundLearner:
+        """Start the background chunk runner (`serve.learner`).  The
+        request path keeps serving the committed snapshot throughout;
+        `submit_feedback` wakes the thread."""
+        if not self.serve_cfg.learning:
+            raise RuntimeError("server is frozen (learning=False); there "
+                               "is nothing for a learner thread to run")
+        if self._learner is None:
+            self._learner = BackgroundLearner(self)
+        self._learner.start()
+        return self._learner
+
+    def stop_learner(self, drain: bool = True,
+                     timeout: Optional[float] = None) -> int:
+        """Stop + join the learner; returns events it learned.  With
+        drain=True every runnable chunk is finished first (no
+        concurrent submissions -> bitwise the cooperative loop).
+        Re-raises any exception the learner thread died with."""
+        if self._learner is None:
             return 0
-        self._state = self.engine.run(self._state, self._delay_offsets, n)
-        self.chunk_log.append(n)
-        back = 1 - self._front
-        self._buf[back] = jax.block_until_ready(
-            self.engine.iterate(self._state))
-        self._front = back
-        self._events_since_ckpt += n
-        every = self.serve_cfg.checkpoint_every
-        if every is not None and self._events_since_ckpt >= every:
-            self.checkpoint()
-        return n
+        return self._learner.stop(drain=drain, timeout=timeout)
 
     def serve(self, task_ids, features, feedback_task_ids=None):
         """One request batch: predict, enqueue feedback, run one chunk.
 
-        Predictions are scored against the CURRENT committed buffer
+        Predictions are scored against the CURRENT committed snapshot
         before the chunk runs — this batch's feedback affects the NEXT
         batch's predictions, which is what lets the request path never
-        block on learning.  Returns (predictions, FeedbackReceipt,
-        events_learned).
+        block on learning.  With the background learner running, the
+        chunk step is left to it (ran = 0 here).  Returns (predictions,
+        FeedbackReceipt, events_learned).
         """
         preds = self.predict(task_ids, features)
         receipt = FeedbackReceipt(0, 0)
         if feedback_task_ids is not None:
             receipt = self.submit_feedback(feedback_task_ids)
-        ran = self.step()
+        ran = 0 if self.learner_running else self.step()
         return preds, receipt, ran
 
     # ------------------------------------------------- checkpoint/restart
     def checkpoint(self) -> Optional[str]:
         """Write the engine state as `step_<event>.npz`, rotated to
-        `keep_last`.  Returns the written path (None if no ckpt_dir)."""
+        `keep_last`.  Returns the written path (None if no ckpt_dir).
+        Serialized against the chunk runner by the state lock."""
         if self.serve_cfg.ckpt_dir is None:
             return None
-        path = checkpoint.save(self.serve_cfg.ckpt_dir,
-                               int(self._state.event), self._state,
-                               keep_last=self.serve_cfg.keep_last)
-        self._events_since_ckpt = 0
+        with self._state_lock:
+            path = checkpoint.save(self.serve_cfg.ckpt_dir,
+                                   int(self._state.event), self._state,
+                                   keep_last=self.serve_cfg.keep_last)
+            self._events_since_ckpt = 0
         return path
 
     @classmethod
@@ -326,20 +479,23 @@ class AMTLServer:
                mesh=None, delay_offsets: Array | None = None) -> "AMTLServer":
         """Restart-transparent construction: restore the newest rotated
         checkpoint in `serve_cfg.ckpt_dir` if one exists, else a fresh
-        `engine.init(v0, key)` session.  The restored server's serving
-        buffer — and therefore every subsequent prediction — is bitwise
-        the uninterrupted server's at the same chunk boundary."""
-        server = cls(problem, cfg, v0, key, serve_cfg, mesh=mesh,
-                     delay_offsets=delay_offsets)
+        `engine.init(v0, key)` session.  The init state is built ONCE
+        (it doubles as `restore`'s `like` layout witness) and only the
+        state actually served materializes a serving snapshot.  The
+        restored server's snapshot — and therefore every subsequent
+        prediction — is bitwise the uninterrupted server's at the same
+        chunk boundary."""
+        server = cls.__new__(cls)
+        server._configure(problem, cfg, v0, key, serve_cfg, mesh=mesh,
+                          delay_offsets=delay_offsets)
+        init_state = server.engine.init(v0, key)
         d = serve_cfg.ckpt_dir
         step = checkpoint.latest_step(d) if d is not None else None
-        if step is not None:
-            server._state = checkpoint.restore(
-                d, step, like=server.engine.init(v0, key))
-            back = 1 - server._front
-            server._buf[back] = jax.block_until_ready(
-                server.engine.iterate(server._state))
-            server._front = back
+        if step is None:
+            server._install_state(init_state)
+        else:
+            server._install_state(checkpoint.restore(d, step,
+                                                     like=init_state))
         return server
 
     # ---------------------------------------------------------- telemetry
@@ -352,12 +508,18 @@ class AMTLServer:
         return int(self._pending.sum())
 
     def stats(self) -> dict[str, Any]:
-        return {
+        out = {
             "requests": self._n_requests,
             "predictions": self._n_predictions,
             "events": self.event_count,
             "chunks": len(self.chunk_log),
             "pending_feedback": self.pending_feedback,
             "rejected_feedback": self._n_rejected,
+            "shed_feedback": self._n_shed,
             "learning": self.serve_cfg.learning,
+            "learner_running": self.learner_running,
+            "learner_chunks": 0 if self._learner is None
+                              else self._learner.chunks,
+            "slo": None if self._slo is None else self._slo.snapshot(),
         }
+        return out

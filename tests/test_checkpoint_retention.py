@@ -113,6 +113,44 @@ def test_keep_last_same_step_other_padding_is_rotatable(tmp_path):
     assert os.listdir(d) == ["step_00000003.npz"]
 
 
+def test_restore_resolves_mixed_padding_record(tmp_path):
+    """Regression: `latest_step` parses step_5.npz to 5 but `restore`
+    hardcoded step_{step:08d}.npz and raised FileNotFoundError on the
+    very step `latest_step` just reported — the
+    latest_step -> restore round-trip was broken for any record not
+    written with the canonical 8-digit padding."""
+    d = str(tmp_path)
+    checkpoint.save(d, 5, _tree(5))
+    os.rename(os.path.join(d, "step_00000005.npz"),
+              os.path.join(d, "step_5.npz"))
+    step = checkpoint.latest_step(d)
+    assert step == 5
+    got = checkpoint.restore(d, step, like=_tree(0))
+    np.testing.assert_array_equal(np.asarray(got["v"]),
+                                  np.asarray(_tree(5)["v"]))
+
+
+def test_restore_prefers_padded_name_on_ties(tmp_path):
+    """Both step_00000007.npz and step_7.npz present: restore reads the
+    canonically padded record (the one `save` writes)."""
+    d = str(tmp_path)
+    checkpoint.save(d, 7, _tree(7))
+    os.rename(os.path.join(d, "step_00000007.npz"),
+              os.path.join(d, "step_7.npz"))
+    # the padded record is newer and holds different data
+    checkpoint.save(d, 7, {"v": jnp.full((3, 2), 99.0, jnp.float32),
+                           "event": jnp.asarray(7, jnp.int32)})
+    got = checkpoint.restore(d, 7, like=_tree(0))
+    np.testing.assert_array_equal(np.asarray(got["v"]),
+                                  np.full((3, 2), 99.0, np.float32))
+
+
+def test_restore_missing_step_names_canonical_file(tmp_path):
+    checkpoint.save(str(tmp_path), 1, _tree(1))
+    with pytest.raises(FileNotFoundError, match="step_00000009.npz"):
+        checkpoint.restore(str(tmp_path), 9, like=_tree(0))
+
+
 def test_keep_last_validates(tmp_path):
     with pytest.raises(ValueError, match="keep_last must be >= 1"):
         checkpoint.save(str(tmp_path), 0, _tree(0), keep_last=0)

@@ -244,7 +244,86 @@ def test_coalesce_floors_to_events_per_step(small_problem, mesh1):
     assert server.pending_feedback == 0
 
 
+def test_resume_restores_mixed_padding_checkpoint(small_problem, mesh1,
+                                                  tmp_path):
+    """Regression: `latest_step` parses step_5.npz to 5 but `restore`
+    re-formatted it as step_00000005.npz and raised FileNotFoundError —
+    `AMTLServer.resume` crashed on a directory the rotation fix of PR 7
+    deliberately tolerates."""
+    import os
+    serve_cfg = ServeConfig(chunk_events=4, ckpt_dir=str(tmp_path))
+    server = _server(small_problem, _cfg(small_problem, "delta"), mesh1,
+                     serve_cfg)
+    server.submit_feedback([0, 1, 2, 3])
+    server.step()
+    server.checkpoint()
+    os.rename(tmp_path / "step_00000004.npz", tmp_path / "step_4.npz")
+    want = np.asarray(server.iterate())
+    del server
+    resumed = AMTLServer.resume(
+        small_problem, _cfg(small_problem, "delta"),
+        jnp.zeros((small_problem.dim, small_problem.num_tasks), jnp.float32),
+        jax.random.PRNGKey(0), serve_cfg)
+    assert resumed.event_count == 4
+    np.testing.assert_array_equal(np.asarray(resumed.iterate()), want)
+
+
+def test_resume_builds_init_state_once(small_problem, mesh1, tmp_path,
+                                       monkeypatch):
+    """Regression: `resume` computed `engine.init(v0, key)` twice (ctor
+    + `like`) and materialized a front buffer it immediately replaced.
+    Now the init state is built once and only the state actually served
+    materializes a snapshot."""
+    import repro.serve.server as srv_mod
+    serve_cfg = ServeConfig(chunk_events=4, ckpt_dir=str(tmp_path))
+    server = _server(small_problem, _cfg(small_problem, "delta"), mesh1,
+                     serve_cfg)
+    server.submit_feedback([0, 1, 2])
+    server.step()
+    server.checkpoint()
+    del server
+
+    init_calls = []
+    real_make_engine = srv_mod.make_engine
+
+    def spying_make_engine(problem, cfg, mesh=None):
+        eng = real_make_engine(problem, cfg, mesh)
+        real_init = eng.init
+
+        def counted_init(v0, key):
+            init_calls.append(1)
+            return real_init(v0, key)
+        return eng._replace(init=counted_init)
+
+    monkeypatch.setattr(srv_mod, "make_engine", spying_make_engine)
+    resumed = AMTLServer.resume(
+        small_problem, _cfg(small_problem, "delta"),
+        jnp.zeros((small_problem.dim, small_problem.num_tasks), jnp.float32),
+        jax.random.PRNGKey(0), serve_cfg)
+    assert len(init_calls) == 1
+    assert resumed.event_count == 3
+
+
 # ------------------------------------------------------- predict surface
+@pytest.mark.parametrize("loss_name", ("lstsq", "logistic"))
+def test_predict_empty_batch_returns_empty_scores(small_problem, mesh1,
+                                                  loss_name):
+    """Regression: `predict([], zeros((0, d)))` reached
+    `jnp.concatenate([])` (the slice loop never runs) and raised
+    ValueError.  An empty request batch is a valid request: it returns
+    an empty (0,) score array in the link's dtype."""
+    problem = small_problem._replace(loss_name=loss_name)
+    server = _server(problem, _cfg(problem, "delta"), mesh1)
+    out = server.predict([], np.zeros((0, problem.dim), np.float32))
+    assert out.shape == (0,)
+    assert out.dtype == jnp.float32
+    assert server.stats()["requests"] == 1
+    assert server.stats()["predictions"] == 0
+    # non-empty requests on the same server still serve normally
+    t, x = _requests(problem, 3)
+    assert np.asarray(server.predict(t, x)).shape == (3,)
+
+
 def test_predict_micro_batches_pad_and_slice(small_problem, mesh1):
     """Bucketed padding and max_batch slicing return exactly the
     unpadded scores in request order."""
