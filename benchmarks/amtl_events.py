@@ -42,6 +42,15 @@ even there: the replicated prox DUPLICATES the sketch on every shard
 while the distributed prox divides it, so killing that duplication shows
 up as wall-clock even on a shared CPU.
 
+The `batch_ragged` row (PR 9) runs the batch engine on the SAME (T, n, d)
+buffer with skewed per-task `row_counts` (task t owns 1 + t % n rows) and
+the same event budget: every gradient masks on its task's count.  Its
+`batch_trimmed` twin runs the pre-ragged workaround — trim every cohort
+to n_min and drop `row_counts` — so `speedup.ragged_over_trimmed`
+records what keeping ALL rows costs in events/sec against throwing the
+surplus away (the masked buffer carries n_max rows per task where the
+trimmed one carries n_min).
+
 The SGD-AMTL rows (`delta_full`/`delta_sgd`, `batch_full`/`batch_sgd`)
 run on a SECOND problem with large per-task n (D_SGD x T_SGD, N_SGD
 samples) where the per-event gradient dominates — the paper's §III-C
@@ -97,6 +106,19 @@ def _problem() -> MTLProblem:
     xs = jax.random.normal(kx, (T, N_SAMPLES, D)) / np.sqrt(D)
     ys = jax.random.normal(ky, (T, N_SAMPLES))
     return MTLProblem(xs, ys, "lstsq", "nuclear", 0.1)
+
+
+def _ragged_problem(problem: MTLProblem) -> MTLProblem:
+    # skewed cohorts: task t owns 1 + t % n of the n buffered rows
+    counts = 1 + (np.arange(T) % N_SAMPLES)
+    return problem._replace(row_counts=jnp.asarray(counts, jnp.int32))
+
+
+def _trimmed_problem(problem: MTLProblem) -> MTLProblem:
+    # the pre-ragged workaround: every cohort cut to n_min, no masking
+    n_min = 1
+    return MTLProblem(problem.xs[:, :n_min], problem.ys[:, :n_min],
+                      problem.loss_name, problem.reg_name, problem.lam)
 
 
 def _sgd_problem() -> MTLProblem:
@@ -215,6 +237,12 @@ def run(repeats: int = 3) -> list[Row]:
                                   repeats, mesh=mesh)
     sharded_repl_eps = _events_per_sec(problem, sharded_repl_cfg,
                                        BATCH_EVENTS, repeats, mesh=mesh)
+    ragged_problem = _ragged_problem(problem)
+    trimmed_problem = _trimmed_problem(problem)
+    ragged_eps = _events_per_sec(ragged_problem, batch_cfg, BATCH_EVENTS,
+                                 repeats)
+    trimmed_eps = _events_per_sec(trimmed_problem, batch_cfg, BATCH_EVENTS,
+                                  repeats)
     delta_full_eps = _events_per_sec(sgd_problem, delta_full_cfg,
                                      SGD_EVENTS, repeats)
     delta_sgd_eps = _events_per_sec(sgd_problem, delta_sgd_cfg,
@@ -238,6 +266,9 @@ def run(repeats: int = 3) -> list[Row]:
         "distprox_over_sharded": sharded_eps / max(sharded_repl_eps, 1e-12),
         "delta_sgd_over_full": delta_sgd_eps / max(delta_full_eps, 1e-12),
         "batch_sgd_over_full": batch_sgd_eps / max(batch_full_eps, 1e-12),
+        # keeping ALL skewed cohorts (masked n_max buffer) vs the old
+        # trim-to-n_min workaround, same batch engine + event budget
+        "ragged_over_trimmed": ragged_eps / max(trimmed_eps, 1e-12),
     }
     # the CI floor: BOTH SGD rows must beat their full-gradient twin
     speedup["sgd_over_full"] = min(speedup["delta_sgd_over_full"],
@@ -273,6 +304,15 @@ def run(repeats: int = 3) -> list[Row]:
         # PR-3 replicated prox, kept as the distprox_over_sharded baseline
         "sharded_repl": _row(sharded_repl_cfg, sharded_repl_eps,
                              sharded_mem),
+        # ragged cohorts (skewed row_counts over the full n-row buffer)
+        # vs the trim-to-n_min workaround, both on the batch engine
+        "batch_ragged": {**_row(batch_cfg, ragged_eps, batch_mem),
+                         "row_counts_min": 1, "row_counts_max": N_SAMPLES,
+                         "rows_valid": int(np.sum(
+                             np.asarray(ragged_problem.row_counts))),
+                         "rows_buffered": T * N_SAMPLES},
+        "batch_trimmed": {**_row(batch_cfg, trimmed_eps, batch_mem),
+                          "rows_valid": T, "rows_buffered": T},
         # SGD-AMTL pairs on the large-n problem: full gradient vs the
         # seeded rank-bsz minibatch, same engine/cadence otherwise
         "delta_full": _row(delta_full_cfg, delta_full_eps,
@@ -328,6 +368,11 @@ def run(repeats: int = 3) -> list[Row]:
             f"prox=replicated "
             f"comm={report['sharded_repl']['comm_bytes_per_refresh']}B "
             f"vs_dist_comm={report['sharded']['comm_bytes_per_refresh']}B"),
+        Row("amtl_events/batch_ragged", 1e6 / ragged_eps,
+            f"events/sec={ragged_eps:.2f} "
+            f"row_counts=1..{N_SAMPLES} (skewed) "
+            f"vs_trimmed={speedup['ragged_over_trimmed']:.2f}x "
+            f"(trimmed={trimmed_eps:.2f})"),
         Row("amtl_events/delta_sgd", 1e6 / delta_sgd_eps,
             f"events/sec={delta_sgd_eps:.2f} bsz={SGD_BATCH}/{N_SGD} "
             f"vs_full={speedup['delta_sgd_over_full']:.2f}x "

@@ -6,7 +6,16 @@ batch also submits feedback and runs one coalesced engine chunk),
 FROZEN (same traffic, learning off — the pure snapshot read path), and
 THREADED (PR 8: the background learner thread absorbs the same feedback
 stream concurrently while the main thread hammers predicts — the
-request path never takes the learner's lock).  Per-batch predict
+request path never takes the learner's lock).
+
+Since PR 9 the serving problem is RAGGED (skewed `row_counts`, task t
+owns 1 + t % n of the n buffered rows) and every feedback item on the
+learning paths carries a labeled `(x, y)` row: each accepted item is
+both a gradient event and a new store row, folded into the server's
+`TaskStore` at the next chunk boundary (the cohorts grow live and cross
+power-of-two capacity doublings mid-drive — the engine rebuilds the
+bench measures are the real ingestion cost).  `appends_per_sec` is the
+labeled-row ingestion rate of the cooperative learning drive.  Per-batch predict
 latency is recorded on the learning paths (p50/p95 cooperative,
 p99 + SLO-violation count threaded, via the `slo_ms` admission
 controller).  Every timer read sits behind `jax.block_until_ready` —
@@ -26,8 +35,10 @@ trajectories across PRs.  Keys:
     predict_p99_ms              99th-pct latency on the threaded path
     slo_violations              threaded predict batches over slo_ms
     events_per_sec_learning     engine events absorbed/sec while serving
+    appends_per_sec             labeled rows ingested/sec (cooperative)
     learning_slowdown           frozen/learning requests/sec ratio
-    config                      problem + traffic shape (incl. slo_ms)
+    config                      problem + traffic shape (incl. slo_ms and
+                                the `ragged` row_counts summary)
 
 Serving equivalence (frozen == frozen engine bitwise, learning == plain
 `run` over the same chunks bitwise, threaded snapshots == committed
@@ -61,7 +72,9 @@ def _problem() -> MTLProblem:
     kx, ky = jax.random.split(jax.random.PRNGKey(2))
     xs = jax.random.normal(kx, (T_S, N_S, D_S)) / np.sqrt(D_S)
     ys = jax.random.normal(ky, (T_S, N_S))
-    return MTLProblem(xs, ys, "lstsq", "nuclear", 0.1)
+    # skewed ragged cohorts: task t owns 1 + t % n of the n buffered rows
+    counts = jnp.asarray(1 + (np.arange(T_S) % N_S), jnp.int32)
+    return MTLProblem(xs, ys, "lstsq", "nuclear", 0.1, row_counts=counts)
 
 
 def _cfg() -> AMTLConfig:
@@ -77,7 +90,14 @@ def _traffic(problem: MTLProblem, seed: int = 0):
         .astype(np.float32)
     fb = rng.integers(0, problem.num_tasks,
                       size=(N_BATCHES, FEEDBACK_PER_BATCH))
-    return t, x, fb
+    # labeled rows riding the feedback: each accepted item is one event
+    # AND one new store row (folded at the next chunk boundary)
+    fb_x = (rng.standard_normal(
+        (N_BATCHES, FEEDBACK_PER_BATCH, problem.dim))
+        / np.sqrt(problem.dim)).astype(np.float32)
+    fb_y = rng.standard_normal((N_BATCHES, FEEDBACK_PER_BATCH)) \
+        .astype(np.float32)
+    return t, x, fb, fb_x, fb_y
 
 
 def _server(problem: MTLProblem, learning: bool,
@@ -91,11 +111,12 @@ def _server(problem: MTLProblem, learning: bool,
 
 def _drive(problem: MTLProblem, learning: bool):
     """One full traffic replay; returns (wall secs, per-batch predict ms,
-    events learned).  Fresh server per rep so chunk state is identical."""
+    events learned, labeled rows appended).  Fresh server per rep so
+    chunk state (and the store's capacity ladder) is identical."""
     server = _server(problem, learning)
-    t, x, fb = _traffic(problem)
+    t, x, fb, fb_x, fb_y = _traffic(problem)
     lat_ms = []
-    events = 0
+    events = appends = 0
     t0 = time.perf_counter()
     for i in range(N_BATCHES):
         tb = time.perf_counter()
@@ -103,10 +124,11 @@ def _drive(problem: MTLProblem, learning: bool):
         jax.block_until_ready(preds)      # latency = computed, not dispatched
         lat_ms.append(1e3 * (time.perf_counter() - tb))
         if learning:
-            server.submit_feedback(fb[i])
+            appends += server.submit_feedback(fb[i], fb_x[i],
+                                              fb_y[i]).accepted
             events += server.step()       # step() commits (blocks) the swap
     total = time.perf_counter() - t0
-    return total, lat_ms, events
+    return total, lat_ms, events, appends
 
 
 def _drive_threaded(problem: MTLProblem):
@@ -116,7 +138,7 @@ def _drive_threaded(problem: MTLProblem):
     Returns (wall secs of the serving loop, per-batch ms, SLO
     violations, events learned)."""
     server = _server(problem, learning=True, slo_ms=SLO_MS)
-    t, x, fb = _traffic(problem)
+    t, x, fb, fb_x, fb_y = _traffic(problem)
     server.start_learner()
     lat_ms = []
     t0 = time.perf_counter()
@@ -125,7 +147,7 @@ def _drive_threaded(problem: MTLProblem):
         preds = server.predict(t[i], x[i])
         jax.block_until_ready(preds)
         lat_ms.append(1e3 * (time.perf_counter() - tb))
-        server.submit_feedback(fb[i])
+        server.submit_feedback(fb[i], fb_x[i], fb_y[i])
     total = time.perf_counter() - t0      # serving loop only, not drain
     events = server.stop_learner(drain=True)
     violations = server.stats()["slo"]["violations"]
@@ -142,12 +164,12 @@ def run(repeats: int = 3) -> list[Row]:
     n_requests = N_BATCHES * BATCH_REQ
     best_learn, best_frozen = float("inf"), float("inf")
     best_thread = float("inf")
-    lat_ms, events = [], 0
+    lat_ms, events, appends = [], 0, 0
     lat_thread, violations = [], 0
     for _ in range(repeats):
-        total, lat, ev = _drive(problem, learning=True)
+        total, lat, ev, app = _drive(problem, learning=True)
         if total < best_learn:
-            best_learn, lat_ms, events = total, lat, ev
+            best_learn, lat_ms, events, appends = total, lat, ev, app
         best_frozen = min(best_frozen, _drive(problem, learning=False)[0])
         total, lat, viol, _ = _drive_threaded(problem)
         if total < best_thread:
@@ -165,6 +187,7 @@ def run(repeats: int = 3) -> list[Row]:
         "predict_p99_ms": float(np.percentile(lat_thread, 99)),
         "slo_violations": int(violations),
         "events_per_sec_learning": events / best_learn,
+        "appends_per_sec": appends / best_learn,
         "learning_slowdown": rps_frozen / max(rps_learn, 1e-12),
         "config": {"d": D_S, "T": T_S, "n_samples": N_S, "tau": TAU_S,
                    "engine": "batch", "event_batch": EVENT_BATCH,
@@ -173,6 +196,11 @@ def run(repeats: int = 3) -> list[Row]:
                    "feedback_per_batch": FEEDBACK_PER_BATCH,
                    "n_batches": N_BATCHES,
                    "slo_ms": SLO_MS,
+                   "ragged": {"row_counts_min": 1, "row_counts_max": N_S,
+                              "rows_valid": int(np.sum(
+                                  np.asarray(problem.row_counts))),
+                              "rows_buffered": T_S * N_S,
+                              "labeled_feedback": True},
                    "backend": jax.default_backend()},
     }
     try:
@@ -186,7 +214,9 @@ def run(repeats: int = 3) -> list[Row]:
 
     return [
         Row("serving/requests_learning", 1e6 / rps_learn,
-            f"req/sec={rps_learn:.1f} events/sec={row['events_per_sec_learning']:.1f}"),
+            f"req/sec={rps_learn:.1f} "
+            f"events/sec={row['events_per_sec_learning']:.1f} "
+            f"appends/sec={row['appends_per_sec']:.1f}"),
         Row("serving/requests_frozen", 1e6 / rps_frozen,
             f"req/sec={rps_frozen:.1f} "
             f"slowdown_learning={row['learning_slowdown']:.2f}x"),

@@ -14,9 +14,20 @@ batch engine consumes the hospitals' gradient events as an open-ended
 stream (chunks of whatever arrives), pays the server prox only at the
 decoupled cadence (`prox_every = 4 * event_batch`), checkpoints the live
 engine state mid-stream, and — after a simulated server restart — resumes
-bitwise.  The engine path uses an equal-cohort stacked copy of the data
-(ragged cohorts are simulator-only for now, see ROADMAP) with the slow
-hospitals modeled as `delay_offsets` staleness.
+bitwise.  The engine runs the REAL ragged cohorts: `stack_ragged` pads
+them into one `(T, cap, d)` buffer with per-task `row_counts`, every
+gradient and minibatch selection masks on each hospital's true cohort
+size, and no patient row is thrown away to equalize the tasks.
+(Heterogeneous per-task losses stay on the simulator path; the engine
+part uses the regression view of all 12 cohorts.)
+
+Part 3 is the live-ingestion loop on top: an `AMTLServer` keeps serving
+length-of-stay predictions while hospitals stream labeled feedback —
+each accepted `(x, y)` row is both a gradient event and a NEW patient
+record, folded into the server's `TaskStore` at the next chunk boundary.
+The cohorts grow mid-session (crossing a capacity doubling), and the
+grown data demonstrably moves later predictions against a label-free
+twin fed the same events.
 """
 import tempfile
 
@@ -69,40 +80,48 @@ def simulate(problem, sizes):
     assert async_.total_time < sync.total_time
 
 
+def ragged_engine_problem(problem):
+    """The hospitals' cohorts, ragged, as one padded engine problem."""
+    from repro.data import stack_ragged
+    xs = [np.asarray(x, np.float32) for x in problem.xs]
+    ys = [np.asarray(y, np.float32) for y in problem.ys]
+    return stack_ragged(xs, ys, "lstsq", "nuclear", 0.1)
+
+
 def stream(problem, sizes):
     """Part 2: the jitted engine as a long-lived checkpointed session."""
     import jax
     import jax.numpy as jnp
 
     from repro import checkpoint
-    from repro.core import MTLProblem, default_config, make_engine
+    from repro.core import default_config, make_engine
 
-    # Stacked equal-cohort copy: trim every cohort to the smallest one.
-    # (Heterogeneous losses / ragged cohorts stay on the simulator path.)
-    n_min = int(min(sizes))
-    xs = jnp.asarray(np.stack([x[:n_min] for x in problem.xs]), jnp.float32)
-    ys = jnp.asarray(np.stack([np.asarray(y[:n_min], np.float64)
-                               for y in problem.ys]), jnp.float32)
-    stacked = MTLProblem(xs, ys, "lstsq", "nuclear", 0.1)
+    ragged = ragged_engine_problem(problem)
+    counts = np.asarray(ragged.row_counts)
+    assert counts.tolist() == [len(x) for x in problem.xs]
+    print(f"[stream      ] ragged cohorts {counts.min()}..{counts.max()} "
+          f"padded to cap {ragged.xs.shape[1]} "
+          f"({counts.sum()} of {ragged.num_tasks * ragged.xs.shape[1]} "
+          f"rows valid)")
 
     # Engine selection through default_config's validated kwargs: batched
     # events, server prox every 4 batches (one (d, T) SVT per 32 events),
     # SGD-AMTL forward steps — each activation computes its gradient on a
-    # seeded 32-patient minibatch of the cohort instead of all n_min rows
-    # (unbiased (n/32)-scaled; the restart contract below is unchanged
-    # because the per-event sampling seeds are re-derived from the
-    # checkpointed PRNG chain, not stored).
-    cfg = default_config(stacked, tau=8, engine="batch", event_batch=8,
+    # seeded 32-patient minibatch of ITS OWN cohort (the masked selection
+    # never touches padding; unbiased (n_t/32)-scaled; the restart
+    # contract below is unchanged because the per-event sampling seeds
+    # are re-derived from the checkpointed PRNG chain, not stored).
+    cfg = default_config(ragged, tau=8, engine="batch", event_batch=8,
                          prox_every=32, dynamic_step=True, batch_size=32)
-    engine = make_engine(stacked, cfg)
+    engine = make_engine(ragged, cfg)
 
     # Slow hospitals read at ~5x the mean staleness of the fast ones.
     offsets = jnp.asarray([5.0 if i in SLOW else 1.0
-                           for i in range(stacked.num_tasks)], jnp.float32)
+                           for i in range(ragged.num_tasks)], jnp.float32)
 
     key = jax.random.PRNGKey(0)
-    w0 = jnp.zeros((stacked.dim, stacked.num_tasks), jnp.float32)
-    obj0 = float(stacked.objective(w0))
+    w0 = jnp.zeros((ragged.dim, ragged.num_tasks), jnp.float32)
+    obj0 = float(ragged.objective(w0))
 
     # The stream: 30 chunks of 64 events arrive; the server dies after 15.
     chunk, n_chunks = 64, 30
@@ -123,11 +142,65 @@ def stream(problem, sizes):
                           np.asarray(engine.iterate(ref)))
 
     from repro.core import backward
-    w = backward(stacked, engine.iterate(state), cfg.eta)
-    obj = float(stacked.objective(w))
+    w = backward(ragged, engine.iterate(state), cfg.eta)
+    obj = float(ragged.objective(w))
     print(f"[stream      ] {int(state.event)} events, objective "
           f"{obj0:.1f} -> {obj:.1f} (restart was bitwise-invisible)")
     assert obj < obj0
+
+
+def feedback(problem, sizes):
+    """Part 3: learn-while-serve with label-carrying feedback ingestion."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import default_config
+    from repro.serve import AMTLServer, ServeConfig
+
+    ragged = ragged_engine_problem(problem)
+    cfg = default_config(ragged, tau=8, engine="batch", event_batch=8,
+                         prox_every=8)
+    w0 = jnp.zeros((ragged.dim, ragged.num_tasks), jnp.float32)
+    serve_cfg = ServeConfig(chunk_events=32)
+    server = AMTLServer(ragged, cfg, w0, jax.random.PRNGKey(1), serve_cfg)
+    twin = AMTLServer(ragged, cfg, w0, jax.random.PRNGKey(1), serve_cfg)
+
+    rng = np.random.default_rng(42)
+    n_queries = 8
+    q_t = rng.integers(0, ragged.num_tasks, size=n_queries)
+    q_x = (rng.standard_normal((n_queries, ragged.dim))
+           / np.sqrt(ragged.dim)).astype(np.float32)
+
+    cap0 = server.problem.xs.shape[1]
+    busy = int(np.argmax(sizes))           # the busiest hospital admits most
+    for _ in range(24):
+        k = 32
+        fb_t = np.full(k, busy, np.int64)
+        fb_t[: k // 2] = rng.integers(0, ragged.num_tasks, size=k // 2)
+        fb_x = (rng.standard_normal((k, ragged.dim))
+                / np.sqrt(ragged.dim)).astype(np.float32)
+        fb_y = fb_x @ rng.standard_normal(ragged.dim).astype(np.float32)
+        # server ingests the labeled rows; the twin gets the same EVENTS
+        # with no data — isolating what the grown cohorts contribute
+        server.submit_feedback(fb_t, fb_x, fb_y)
+        twin.submit_feedback(fb_t)
+        server.step()
+        twin.step()
+
+    grown = server._store
+    print(f"[feedback    ] {grown.num_rows - int(np.sum(sizes))} new "
+          f"patient rows ingested at chunk boundaries; busiest hospital "
+          f"{sizes[busy]} -> {grown.row_counts[busy]} rows; buffer "
+          f"capacity {cap0} -> {grown.capacity} (power-of-two doubling)")
+    assert grown.capacity > cap0
+    assert server.chunk_log == twin.chunk_log
+
+    p_grown = np.asarray(server.predict(q_t, q_x))
+    p_twin = np.asarray(twin.predict(q_t, q_x))
+    drift = float(np.max(np.abs(p_grown - p_twin)))
+    print(f"[feedback    ] same events, +/- the ingested rows: predictions "
+          f"moved by up to {drift:.4f}")
+    assert drift > 0.0
 
 
 def main():
@@ -135,8 +208,10 @@ def main():
     print(f"hospitals: {len(sizes)} cohorts, sizes {sizes.tolist()}")
     simulate(problem, sizes)
     stream(problem, sizes)
+    feedback(problem, sizes)
     print("OK: no hospital waits for the slowest link; raw data never "
-          "leaves a node (only d-dim model vectors move); the server "
+          "leaves a node (only d-dim model vectors move); cohorts of any "
+          "size join unpadded and keep growing mid-session; the server "
           "checkpoints and resumes mid-stream without perturbing the "
           "event sequence.")
 

@@ -91,6 +91,15 @@ selection itself is generated in-kernel from counter hashes
 (`repro.kernels.ops.lstsq_grad_sampled`), with no gather and no
 materialized index array.
 
+Ragged task cohorts: an `MTLProblem` with `row_counts` set (the
+`repro.data.TaskStore` layout — per-task valid-row counts over a shared
+padded buffer) runs unchanged through the delta, batch, and sharded
+engines; every loss/gradient/minibatch expression masks rows >= n_t
+inside `repro.core.losses`, the sharded engine ships row_counts as one
+more per_task shard_map input, and uniform row_counts reproduce the
+unmasked engines bitwise on the CPU oracle path.  engine="dense" is the
+exact uniform seed baseline and rejects ragged problems.
+
 This is bit-faithful to Algorithm 1's mathematics while being jit-compiled,
 deterministic under a PRNG key, and mesh-shardable.  Wall-clock behaviour
 (Tables I/III) is studied separately by `repro.core.simulator`.
@@ -662,9 +671,7 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
     distributed = cfg.prox_mode == "distributed"
     plan = ProxPlan(axis=axis, num_tasks=num_tasks, n_local=n_local)
 
-    def local_step(xs, ys, offs, st):
-        problem_l = MTLProblem(xs, ys, problem.loss_name, problem.reg_name,
-                               problem.lam)
+    def local_body(problem_l, offs, st):
         t_off = jax.lax.axis_index(axis) * n_local
         # Folded off the batch-start key, replicated — identical to the
         # serial engines' sketch key.
@@ -778,12 +785,36 @@ def _one_batch_sharded(problem: MTLProblem, cfg: AMTLConfig,
 
     sp = task_shard_specs(axis)
     state_specs = _sharded_state_specs(cfg, axis)
+    if problem.row_counts is None:
+        # Uniform problems keep the exact pre-ragged shard_map signature
+        # (and therefore the exact trace/bits of the PR-8 engine).
+        def local_step(xs, ys, offs, st):
+            problem_l = MTLProblem(xs, ys, problem.loss_name,
+                                   problem.reg_name, problem.lam)
+            return local_body(problem_l, offs, st)
+
+        step = shard_map_compat(
+            local_step, mesh=mesh,
+            in_specs=(sp["per_task"], sp["per_task"], sp["replicated"],
+                      state_specs),
+            out_specs=state_specs)
+        return step(problem.xs, problem.ys, delay_offsets, state)
+
+    # Ragged: row_counts ride along as one more per_task input — each
+    # shard's local problem masks its own tasks' padded rows, everything
+    # else (chain replay, ownership masking, collectives) is unchanged.
+    def local_step_ragged(xs, ys, rcs, offs, st):
+        problem_l = MTLProblem(xs, ys, problem.loss_name,
+                               problem.reg_name, problem.lam, rcs)
+        return local_body(problem_l, offs, st)
+
     step = shard_map_compat(
-        local_step, mesh=mesh,
-        in_specs=(sp["per_task"], sp["per_task"], sp["replicated"],
-                  state_specs),
+        local_step_ragged, mesh=mesh,
+        in_specs=(sp["per_task"], sp["per_task"], sp["per_task"],
+                  sp["replicated"], state_specs),
         out_specs=state_specs)
-    return step(problem.xs, problem.ys, delay_offsets, state)
+    return step(problem.xs, problem.ys, problem.row_counts, delay_offsets,
+                state)
 
 
 def validate_config(cfg: AMTLConfig, reg_name: str | None = None) -> None:
@@ -945,6 +976,11 @@ def make_engine(problem: MTLProblem, cfg: AMTLConfig,
     raises on a well-formed event count.
     """
     validate_config(cfg, problem.reg_name)
+    if cfg.engine == "dense" and problem.row_counts is not None:
+        raise ValueError(
+            "engine='dense' is the exact uniform seed baseline; ragged "
+            "problems (row_counts set) require engine='delta', 'batch', "
+            "or 'sharded'")
     mesh, n_shards = _resolve_mesh(problem, cfg, mesh)
     num_tasks = problem.num_tasks
     per_step = cfg.event_batch if cfg.engine in ("batch", "sharded") else 1

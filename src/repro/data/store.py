@@ -1,0 +1,258 @@
+"""TaskStore: padded+masked ragged task data with live row ingestion.
+
+The paper's deployment story is task nodes that each hold a *local,
+private, differently-sized* cohort that keeps growing while the central
+server learns.  The jitted engines want one stacked (T, n, d) layout; the
+TaskStore reconciles the two:
+
+  * Canonical storage is HOST numpy: `(T, cap, d)` feature and `(T, cap)`
+    label buffers plus a `(T,)` int32 `row_counts` vector.  Task t owns
+    rows [0, row_counts[t]); rows past its count are zero padding (or
+    garbage from a previous capacity — they are never read, every
+    consumer masks on row_counts).
+  * `problem()` publishes the buffers as a ragged `MTLProblem`
+    (row_counts set) — a cached device view, rebuilt only after an
+    append, so repeated `engine.run` chunks against an unchanged store
+    hand jit the SAME arrays (no retrace, no re-upload).
+  * `append` writes labeled rows in arrival order and grows `cap` by
+    power-of-two doubling when full (the predict micro-batching idiom:
+    the number of distinct buffer shapes — and therefore of jit
+    retraces of the engine step — is logarithmic in the final size).
+    The learning-while-serving platform calls it at chunk boundaries
+    only, so every engine chunk runs against one immutable snapshot.
+  * `save`/`restore` round-trip the buffers through `repro.checkpoint`
+    (strict key/shape/dtype validation), so a store checkpointed next
+    to an engine state resumes bitwise: same buffers, same counts, same
+    capacity, same jit cache keys.
+
+A store built `from_problem` keeps the problem's exact buffer as its
+initial capacity (NOT pow2-rounded): with no appends the published
+problem carries the same arrays plus uniform row_counts, which the
+engines reproduce bitwise against the row_counts=None baseline.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import _resolve_step_path, restore, save
+from repro.core.losses import MTLProblem
+
+
+class TaskStoreState(NamedTuple):
+    """The store's checkpoint pytree (host numpy leaves)."""
+    xs: np.ndarray          # (T, cap, d) float32
+    ys: np.ndarray          # (T, cap)    float32
+    row_counts: np.ndarray  # (T,)        int32
+
+
+class TaskStore:
+    """Ragged task cohorts over a shared padded buffer; see module doc."""
+
+    def __init__(self, xs, ys, row_counts, loss_name: str, reg_name: str,
+                 lam: float):
+        xs = np.asarray(xs, np.float32)
+        ys = np.asarray(ys, np.float32)
+        row_counts = np.asarray(row_counts, np.int32)
+        if xs.ndim != 3 or ys.shape != xs.shape[:2] \
+                or row_counts.shape != (xs.shape[0],):
+            raise ValueError(
+                f"TaskStore buffers must be xs (T, cap, d), ys (T, cap), "
+                f"row_counts (T,); got {xs.shape}, {ys.shape}, "
+                f"{row_counts.shape}")
+        if (row_counts < 0).any() or (row_counts > xs.shape[1]).any():
+            raise ValueError(
+                f"row_counts must lie in [0, cap={xs.shape[1]}]; "
+                f"got {row_counts.tolist()}")
+        self._xs = xs.copy()
+        self._ys = ys.copy()
+        self._row_counts = row_counts.copy()
+        self._loss_name = loss_name
+        self._reg_name = reg_name
+        self._lam = float(lam)
+        self._problem: Optional[MTLProblem] = None
+
+    # ------------------------------------------------------ constructors --
+
+    @classmethod
+    def from_problem(cls, problem: MTLProblem) -> "TaskStore":
+        """Adopt a problem's buffers as the store's initial contents.
+
+        Capacity is EXACTLY the problem's n (not pow2-rounded): until the
+        first overflowing append the published ragged problem keeps the
+        adopted buffer shape, and with uniform row_counts its engines are
+        bitwise the row_counts=None engines.
+        """
+        if problem.row_counts is None:
+            counts = np.full((problem.num_tasks,), problem.xs.shape[1],
+                             np.int32)
+        else:
+            counts = np.asarray(problem.row_counts, np.int32)
+        return cls(np.asarray(problem.xs), np.asarray(problem.ys), counts,
+                   problem.loss_name, problem.reg_name, problem.lam)
+
+    @classmethod
+    def from_ragged(cls, xs_list: Sequence, ys_list: Sequence,
+                    loss_name: str, reg_name: str, lam: float) -> "TaskStore":
+        """Pad a list of per-task (x_t (n_t, d), y_t (n_t,)) cohorts.
+
+        Capacity = max_t n_t; shorter cohorts are zero-padded and masked
+        by row_counts.  This is how a ragged School/hospital-shaped
+        dataset enters the jitted engines without trimming to n_min.
+        """
+        if len(xs_list) != len(ys_list) or not xs_list:
+            raise ValueError("need equal, non-empty xs/ys cohort lists")
+        d = np.asarray(xs_list[0]).shape[1]
+        counts = np.asarray([len(x) for x in xs_list], np.int32)
+        cap = int(counts.max())
+        t = len(xs_list)
+        xs = np.zeros((t, cap, d), np.float32)
+        ys = np.zeros((t, cap), np.float32)
+        for i, (x, y) in enumerate(zip(xs_list, ys_list)):
+            x = np.asarray(x, np.float32)
+            y = np.asarray(y, np.float32)
+            if x.shape != (counts[i], d) or y.shape != (counts[i],):
+                raise ValueError(
+                    f"cohort {i}: expected x ({counts[i]}, {d}) and "
+                    f"y ({counts[i]},), got {x.shape} and {y.shape}")
+            xs[i, :counts[i]] = x
+            ys[i, :counts[i]] = y
+        return cls(xs, ys, counts, loss_name, reg_name, lam)
+
+    # -------------------------------------------------------- properties --
+
+    @property
+    def num_tasks(self) -> int:
+        return self._xs.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self._xs.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self._xs.shape[2]
+
+    @property
+    def row_counts(self) -> np.ndarray:
+        return self._row_counts.copy()
+
+    @property
+    def num_rows(self) -> int:
+        """Total valid rows across tasks."""
+        return int(self._row_counts.sum())
+
+    # ----------------------------------------------------- problem view ---
+
+    def problem(self) -> MTLProblem:
+        """The store's current snapshot as a ragged MTLProblem.
+
+        Cached: repeated calls between appends return the SAME device
+        arrays, so chunked `engine.run` calls hit one jit trace and never
+        re-upload the buffers.  Invalidated by `append`.
+        """
+        if self._problem is None:
+            self._problem = MTLProblem(
+                jnp.asarray(self._xs), jnp.asarray(self._ys),
+                self._loss_name, self._reg_name, self._lam,
+                jnp.asarray(self._row_counts))
+        return self._problem
+
+    # ---------------------------------------------------------- appends ---
+
+    def append(self, task_ids, features, labels) -> int:
+        """Append labeled rows (one per task_id) in arrival order.
+
+        task_ids (k,) int, features (k, d) float, labels (k,) float.
+        Rows land at each task's current row_count; capacity grows by
+        power-of-two doubling when any task would overflow (all tasks
+        share one capacity — the stacked layout).  Returns k.  Callers
+        that feed a live engine (the serving platform) must only append
+        at chunk boundaries: the published problem snapshot changes.
+        """
+        task_ids = np.atleast_1d(np.asarray(task_ids, np.int64))
+        features = np.asarray(features, np.float32)
+        labels = np.atleast_1d(np.asarray(labels, np.float32))
+        if features.ndim == 1:
+            features = features[None, :]
+        k = task_ids.shape[0]
+        if features.shape != (k, self.dim) or labels.shape != (k,):
+            raise ValueError(
+                f"append expects features ({k}, {self.dim}) and labels "
+                f"({k},) for {k} task ids; got {features.shape} and "
+                f"{labels.shape}")
+        if k == 0:
+            return 0
+        if (task_ids < 0).any() or (task_ids >= self.num_tasks).any():
+            raise ValueError(
+                f"task_ids must lie in [0, {self.num_tasks}); "
+                f"got {np.unique(task_ids).tolist()}")
+        final = self._row_counts.copy()
+        np.add.at(final, task_ids, 1)
+        need = int(final.max())
+        if need > self.capacity:
+            self._grow(need)
+        for t, x_row, y in zip(task_ids, features, labels):
+            r = self._row_counts[t]
+            self._xs[t, r] = x_row
+            self._ys[t, r] = y
+            self._row_counts[t] = r + 1
+        self._problem = None
+        return k
+
+    def _grow(self, need: int) -> None:
+        """Double capacity until `need` rows fit (bounded jit retraces)."""
+        cap = max(self.capacity, 1)
+        while cap < need:
+            cap *= 2
+        grown_x = np.zeros((self.num_tasks, cap, self.dim), np.float32)
+        grown_y = np.zeros((self.num_tasks, cap), np.float32)
+        grown_x[:, :self.capacity] = self._xs
+        grown_y[:, :self.capacity] = self._ys
+        self._xs, self._ys = grown_x, grown_y
+
+    # ------------------------------------------------------- checkpoint ---
+
+    def state(self) -> TaskStoreState:
+        return TaskStoreState(self._xs.copy(), self._ys.copy(),
+                              self._row_counts.copy())
+
+    def save(self, ckpt_dir: str, step: int,
+             keep_last: Optional[int] = None) -> str:
+        """Write the buffers as `step_<step>.npz` under `ckpt_dir`."""
+        return save(ckpt_dir, step, self.state(), keep_last=keep_last)
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, step: int, loss_name: str,
+                reg_name: str, lam: float) -> "TaskStore":
+        """Rebuild a store from a `save` record, bitwise.
+
+        Shapes are read from the record itself (capacity at save time is
+        part of the state — growth history must survive a resume or the
+        buffer shapes, and with them the jit cache keys, would drift);
+        the leaves then go through `repro.checkpoint.restore` against a
+        shape/dtype skeleton for its strict layout validation.
+        """
+        with np.load(_resolve_step_path(ckpt_dir, step)) as record:
+            # Field keys as `repro.checkpoint` path-flattens this
+            # NamedTuple (attribute path per field).
+            like = TaskStoreState(
+                xs=np.empty(record[".xs"].shape, np.float32),
+                ys=np.empty(record[".ys"].shape, np.float32),
+                row_counts=np.empty(record[".row_counts"].shape, np.int32))
+        state = restore(ckpt_dir, step, like)
+        return cls(np.asarray(state.xs), np.asarray(state.ys),
+                   np.asarray(state.row_counts), loss_name, reg_name, lam)
+
+
+def stack_ragged(xs_list: Sequence, ys_list: Sequence, loss_name: str,
+                 reg_name: str, lam: float) -> MTLProblem:
+    """Pad per-task cohorts straight into a ragged MTLProblem.
+
+    Convenience over `TaskStore.from_ragged(...).problem()` for callers
+    that never append (examples, tests).
+    """
+    return TaskStore.from_ragged(xs_list, ys_list, loss_name, reg_name,
+                                 lam).problem()

@@ -44,10 +44,44 @@ def _lstsq_kernel(x_ref, w_ref, y_ref, out_ref):
                         + contrib).astype(out_ref.dtype)
 
 
+def _lstsq_kernel_masked(scal_ref, x_ref, w_ref, y_ref, out_ref, *, bn: int):
+    """`_lstsq_kernel` plus a traced valid-row mask from a (1, 1) block.
+
+    Ragged task buffers carry REAL rows past n_t (the store's padded
+    capacity), so unlike the zero-padded tail the kernel pads on, they
+    must be masked out of the residual in VMEM.
+    """
+    i = pl.program_id(0)
+    n_t = scal_ref[0, 0]
+    x = x_ref[...].astype(jnp.float32)          # (bn, d)
+    w = w_ref[...].astype(jnp.float32)          # (d, 1)
+    y = y_ref[...].astype(jnp.float32)          # (bn, 1)
+    r = jnp.dot(x, w, preferred_element_type=jnp.float32) - y
+    rows = (jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+            + i * bn).astype(jnp.uint32)
+    r = jnp.where(rows < n_t, r, 0.0)
+    contrib = 2.0 * jnp.dot(x.T, r, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = contrib.astype(out_ref.dtype)
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[...] = (out_ref[...].astype(jnp.float32)
+                        + contrib).astype(out_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def lstsq_grad(x: Array, w: Array, y: Array, *, block_n: int = BLOCK_N,
-               interpret: bool = False) -> Array:
-    """Fused 2 X^T (X w - y).  Returns (d,) in w.dtype (fp32 accumulate)."""
+def lstsq_grad(x: Array, w: Array, y: Array, *, n_t: Array | None = None,
+               block_n: int = BLOCK_N, interpret: bool = False) -> Array:
+    """Fused 2 X^T (X w - y).  Returns (d,) in w.dtype (fp32 accumulate).
+
+    `n_t` (optional, traced) is a ragged buffer's valid-row count: rows
+    >= n_t are masked out of the residual in VMEM (they may hold real
+    appended-but-not-yet-counted data, unlike the kernel's own zero
+    padding).  n_t=None keeps the original unmasked kernel body.
+    """
     n, d = x.shape
     pd = _round_up(d, 128)
     bn = min(block_n, _round_up(n, 128))
@@ -58,16 +92,26 @@ def lstsq_grad(x: Array, w: Array, y: Array, *, block_n: int = BLOCK_N,
     y_p = jnp.pad(y.reshape(n, 1), ((0, pn - n), (0, 0)))
     w_p = jnp.pad(w.reshape(d, 1), ((0, pd - d), (0, 0)))
 
+    if n_t is None:
+        kernel = _lstsq_kernel
+        in_specs = []
+        args = ()
+    else:
+        kernel = functools.partial(_lstsq_kernel_masked, bn=bn)
+        in_specs = [pl.BlockSpec((1, 1), lambda i: (0, 0))]
+        args = (jnp.asarray(n_t).astype(jnp.uint32).reshape(1, 1),)
+
     out = pl.pallas_call(
-        _lstsq_kernel,
+        kernel,
         grid=(pn // bn,),
-        in_specs=[pl.BlockSpec((bn, pd), lambda i: (i, 0)),
-                  pl.BlockSpec((pd, 1), lambda i: (0, 0)),
-                  pl.BlockSpec((bn, 1), lambda i: (i, 0))],
+        in_specs=in_specs + [
+            pl.BlockSpec((bn, pd), lambda i: (i, 0)),
+            pl.BlockSpec((pd, 1), lambda i: (0, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((pd, 1), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((pd, 1), w.dtype),
         interpret=interpret,
-    )(x_p, w_p, y_p)
+    )(*args, x_p, w_p, y_p)
     return out[:d, 0]
 
 

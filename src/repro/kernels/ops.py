@@ -127,58 +127,74 @@ def l21_prox(w: Array, t: Array, *, use_pallas: bool | None = None,
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def lstsq_grad(x: Array, w: Array, y: Array, *,
+def lstsq_grad(x: Array, w: Array, y: Array, *, n_t: Array | None = None,
                use_pallas: bool | None = None,
                interpret: bool = False) -> Array:
+    """Fused 2 X^T (X w - y); `n_t` (traced, optional) masks a ragged
+    buffer's rows >= n_t out of the residual.  n_t=None is the original
+    unmasked expression on both dispatch targets."""
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas or interpret:
-        return _lstsq_pallas(x, w, y, interpret=interpret)
-    return ref.lstsq_grad_ref(x, w, y)
+        return _lstsq_pallas(x, w, y, n_t=n_t, interpret=interpret)
+    if n_t is None:
+        return ref.lstsq_grad_ref(x, w, y)
+    return ref.lstsq_grad_masked_ref(x, w, y, n_t)
 
 
 @functools.partial(jax.jit, static_argnames=("batch_size", "use_pallas",
                                              "interpret"))
 def lstsq_grad_sampled(x: Array, w: Array, y: Array, seed: Array, *,
-                       batch_size: int, use_pallas: bool | None = None,
+                       batch_size: int, n_t: Array | None = None,
+                       use_pallas: bool | None = None,
                        interpret: bool = False) -> Array:
-    """Unbiased seeded-minibatch gradient (n/bsz) * 2 X_S^T (X_S w - y_S).
+    """Unbiased seeded-minibatch gradient (n_t/bsz) * 2 X_S^T (X_S w - y_S).
 
-    `seed` is the per-event uint32 sampling seed, `batch_size` static
-    (bsz = min(batch_size, n) clamp inside — the simulator's SGD-AMTL
-    convention).  S is the rank-bsz counter-hash selection of (seed, row):
-    identical in the Pallas kernel and the jnp oracle, so the CPU oracle
-    path and the TPU kernel sample the same minibatch, and every shard of
-    the sharded engine re-derives an event's selection from the
-    replicated seed.  The oracle gathers the static-size minibatch
-    (O(bsz d) FLOPs on CPU); the kernel masks in VMEM and keeps its
-    single O(n d) pass over X's strips.  batch_size >= n degenerates to
-    `lstsq_grad`'s expression bitwise per backend.
+    `seed` is the per-event uint32 sampling seed, `batch_size` static,
+    `n_t` an optional TRACED valid-row count for ragged padded buffers
+    (bsz = min(batch_size, n_t) clamp inside — the simulator's SGD-AMTL
+    convention; selection restricted to rows < n_t).  S is the rank-bsz
+    counter-hash selection of (seed, row): identical in the Pallas kernel
+    and the jnp oracle, so the CPU oracle path and the TPU kernel sample
+    the same minibatch, and every shard of the sharded engine re-derives
+    an event's selection from the replicated seed.  The oracle gathers
+    the static-size minibatch (O(bsz d) FLOPs on CPU); the kernel masks
+    in VMEM and keeps its single O(n d) pass over X's strips.
+    batch_size >= n_t degenerates to `lstsq_grad`'s masked expression
+    bitwise per backend, and n_t == n keeps every bit of the uniform
+    path.
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas or interpret:
         return _lstsq_sampled_pallas(x, w, y, seed, batch_size=batch_size,
-                                     interpret=interpret)
-    return ref.lstsq_grad_sampled_ref(x, w, y, seed, batch_size)
+                                     n_t=n_t, interpret=interpret)
+    if n_t is None:
+        return ref.lstsq_grad_sampled_ref(x, w, y, seed, batch_size)
+    return ref.lstsq_grad_sampled_masked_ref(x, w, y, seed, batch_size, n_t)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "batch_size", "use_pallas",
                                              "interpret"))
 def sample_mask(n: int, batch_size: int, seed: Array, *,
+                n_t: Array | None = None,
                 use_pallas: bool | None = None,
                 interpret: bool = False) -> Array:
     """(n,) bool keep/drop bits of the seeded minibatch selection.
 
     The standalone view of `lstsq_grad_sampled`'s in-kernel sampler; both
-    dispatch targets must agree exactly for every (n, batch_size, seed)
-    (tests/test_sampling_properties.py pins this).
+    dispatch targets must agree exactly for every (n, batch_size, seed,
+    n_t) (tests/test_sampling_properties.py pins this).  With ragged
+    `n_t`, exactly min(batch_size, n_t) bits are set, all below n_t.
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas or interpret:
-        return _sample_mask_pallas(n, batch_size, seed, interpret=interpret)
-    return ref.sample_mask_ref(n, batch_size, seed)
+        return _sample_mask_pallas(n, batch_size, seed, n_t=n_t,
+                                   interpret=interpret)
+    if n_t is None:
+        return ref.sample_mask_ref(n, batch_size, seed)
+    return ref.sample_mask_masked_ref(n, batch_size, seed, n_t)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "use_pallas", "interpret"))

@@ -144,6 +144,22 @@ def lstsq_grad_ref(x: Array, w: Array, y: Array) -> Array:
     return (2.0 * (x32.T @ (x32 @ w32 - y32))).astype(w.dtype)
 
 
+def lstsq_grad_masked_ref(x: Array, w: Array, y: Array, n_t: Array) -> Array:
+    """Ragged least-squares gradient: rows >= n_t masked out of the residual.
+
+    `x` is a (n, d) PADDED row buffer of which only the first `n_t` (traced
+    int) rows are real task data.  Zeroing the residual of the padded tail
+    removes it from the X^T r contraction exactly; with n_t == n the
+    all-true `where` passes the residual's bits through untouched, so the
+    uniform case reproduces `lstsq_grad_ref` bitwise — the ragged path's
+    equivalence anchor.
+    """
+    x32, w32, y32 = (a.astype(jnp.float32) for a in (x, w, y))
+    rows = jnp.arange(x.shape[0])
+    r = jnp.where(rows < n_t, x32 @ w32 - y32, 0.0)
+    return (2.0 * (x32.T @ r)).astype(w.dtype)
+
+
 # ------------------------------------------------ counter-based sampling ---
 #
 # The SGD engines generate their per-event minibatch selection from a
@@ -240,6 +256,83 @@ def lstsq_grad_sampled_ref(x: Array, w: Array, y: Array, seed: Array,
     w32 = w.astype(jnp.float32)
     r = x32 @ w32 - y32
     return ((2.0 * (n / bsz)) * (x32.T @ r)).astype(w.dtype)
+
+
+def sample_cutoff_masked(n: int, batch_size: int, seed: Array,
+                         n_t: Array) -> tuple[Array, Array]:
+    """Ragged (cut_h, cut_i): bsz-th smallest (hash, row) among VALID rows.
+
+    `n` is the static padded buffer height, `n_t` the traced count of real
+    rows.  The selection law is `sample_cutoff` restricted to rows < n_t
+    with bsz = min(batch_size, n_t): rank the stable (hash, row) order,
+    walk it until bsz valid rows have been passed, and cut at that pair.
+    The keep predicate gains the conjunct `i < n_t`, so padded rows that
+    happen to hash under the cutoff stay dropped.  batch_size >= n_t
+    saturates exactly like the uniform clamp (every valid row kept).  With
+    n_t == n the cumulative-count walk lands on position bsz - 1 of the
+    plain argsort — `sample_cutoff`'s pair, bitwise.
+    """
+    h = counter_hash(seed, jnp.arange(n, dtype=jnp.uint32))
+    order = jnp.argsort(h)                     # stable: (hash, row) lex order
+    valid_sorted = order < n_t
+    bsz = jnp.minimum(jnp.int32(batch_size), n_t.astype(jnp.int32))
+    pos = jnp.argmax(jnp.cumsum(valid_sorted.astype(jnp.int32)) >= bsz)
+    kth = order[pos]
+    sat = jnp.int32(batch_size) >= n_t.astype(jnp.int32)
+    cut_h = jnp.where(sat, jnp.uint32(0xFFFFFFFF), h[kth])
+    cut_i = jnp.where(sat, jnp.uint32(n - 1), kth.astype(jnp.uint32))
+    return cut_h, cut_i
+
+
+def sample_mask_masked_ref(n: int, batch_size: int, seed: Array,
+                           n_t: Array) -> Array:
+    """(n,) bool keep bits over a padded buffer; min(batch_size, n_t) set."""
+    cut_h, cut_i = sample_cutoff_masked(n, batch_size, seed, n_t)
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    h = counter_hash(seed, idx)
+    keep = (h < cut_h) | ((h == cut_h) & (idx <= cut_i))
+    return keep & (idx < n_t.astype(jnp.uint32))
+
+
+def lstsq_grad_sampled_masked_ref(x: Array, w: Array, y: Array, seed: Array,
+                                  batch_size: int, n_t: Array) -> Array:
+    """Ragged unbiased minibatch gradient: (n_t/bsz) * 2 X_S^T (X_S w - y_S).
+
+    S is `sample_mask_masked_ref`'s selection (rank cut over valid rows,
+    bsz = min(batch_size, n_t) traced).  The gather stays static-shaped:
+    bsz_max = min(batch_size, n) rows are gathered in (hash, row) rank
+    order with valid rows partitioned first (stable argsort of the
+    invalid flag), and rows at rank >= bsz are zero-masked out of the
+    contraction.  The n_t/bsz scale is computed in f32 from traced
+    scalars; both operands are integers < 2^24, where a single f32
+    division rounds identically to the f64-then-f32 double rounding of
+    the uniform path's Python-float constant — so with n_t == n the
+    whole expression (selection, gather order, scale bits, contraction)
+    reproduces `lstsq_grad_sampled_ref` bitwise.  n_t == 0 keeps zero
+    rows and returns the zero vector (scale guard avoids 0/0).
+    """
+    n = x.shape[0]
+    bsz_max = min(batch_size, n)
+    if bsz_max >= n:
+        return lstsq_grad_masked_ref(x, w, y, n_t)
+    h = counter_hash(seed, jnp.arange(n, dtype=jnp.uint32))
+    order = jnp.argsort(h)                     # stable: (hash, row) lex order
+    valid_sorted = order < n_t
+    sel = order[jnp.argsort(~valid_sorted, stable=True)[:bsz_max]]
+    bsz = jnp.minimum(jnp.int32(batch_size), n_t.astype(jnp.int32))
+    x32 = x[sel].astype(jnp.float32)
+    y32 = y[sel].astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    # Mask the RESIDUAL of over-rank rows, not the gathered x: a zero
+    # residual row contributes exactly zero to x^T r, and keeping the
+    # first dot's operands select-free leaves its compiled reduction
+    # identical to the uniform path's — masking x instead was observed to
+    # change the dot's summation order under jit by a ulp.
+    row_ok = jnp.arange(bsz_max) < bsz
+    r = jnp.where(row_ok, x32 @ w32 - y32, 0.0)
+    scale = 2.0 * (n_t.astype(jnp.float32)
+                   / jnp.maximum(bsz, 1).astype(jnp.float32))
+    return (scale * (x32.T @ r)).astype(w.dtype)
 
 
 def gauss_from_counters(seed: Array, ctr: Array) -> Array:

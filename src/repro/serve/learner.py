@@ -7,10 +7,11 @@ server-prox refresh inside it) stalls the request path — exactly the
 blocking the asynchronous framework exists to avoid.  `BackgroundLearner`
 moves that loop onto its own daemon thread:
 
-  * loop: run one chunk via `AMTLServer._step_once()` (coalesce,
-    `engine.run`, materialize the new iterate, atomic snapshot flip,
-    auto-checkpoint cadence — all under the server's state lock, which
-    the request path never takes);
+  * loop: run one chunk via `AMTLServer._step_once()` (fold accepted
+    labeled rows into the TaskStore, coalesce, `engine.run`,
+    materialize the new iterate, atomic snapshot flip, auto-checkpoint
+    cadence — all under the server's state lock, which the request
+    path never takes);
   * idle: when the queue has no runnable chunk, park on a wake event
     that `submit_feedback` sets — no spin, sub-ms reaction to new
     feedback (a short timeout re-polls so a floored remainder that

@@ -11,12 +11,25 @@ at it — and splits its two duties onto two CONCURRENT paths:
     load; the request path never takes the learner's state lock, so a
     prediction never waits on an in-flight `run` chunk or the server
     prox refresh inside it.
-  * feedback path — `submit_feedback(task_ids)` enqueues labeled
-    feedback; the chunk runner (the background learner thread via
-    `start_learner()`, or the cooperative `step()`) coalesces the queue
-    into ONE engine chunk (a multiple of `engine.events_per_step`),
-    advances the session with `engine.run`, and flips the serving
-    snapshot at the chunk boundary.
+  * feedback path — `submit_feedback(task_ids, features=None,
+    labels=None)` enqueues labeled feedback, now actually CARRYING the
+    labels: an accepted item with `(features, labels)` is both one
+    future engine event and one new data row for its task.  The chunk
+    runner (the background learner thread via `start_learner()`, or
+    the cooperative `step()`) first folds the accepted rows into the
+    server's `TaskStore` (`data.store`) AT THE CHUNK BOUNDARY — the
+    published ragged problem snapshot, and with it the rebuilt engine,
+    changes only between chunks, never under a running one — then
+    coalesces the queue into ONE engine chunk (a multiple of
+    `engine.events_per_step`), advances the session with `engine.run`,
+    and flips the serving snapshot at the chunk boundary.
+
+Label-free feedback (`features=None`) is the PR-8 path unchanged: no
+store is ever created, the problem and engine objects are never
+rebuilt, and every PR-8 bitwise contract holds verbatim.  The store is
+created lazily (`TaskStore.from_problem`) at the first fold; because
+its initial capacity is exactly the problem's row budget, the fold
+boundary — not store creation — is what first changes the problem.
 
 Threading model (PR 8; components in `serve.learner` / `serve.admission`):
 
@@ -48,10 +61,21 @@ concurrent predict load):
     chunk-boundary `engine.iterate`, and draining the learner with no
     concurrent submissions reproduces the cooperative `step()` loop's
     chunk log exactly (coalescing is deterministic in the queue).
+  * With label-carrying feedback: after any sequence of chunk
+    boundaries the engine state is BITWISE the replay of the same
+    coalesced chunk log with the same rows folded at the same
+    boundaries — fold, rebuild, `engine.run` — over ONE engine
+    session; the store snapshot at every boundary is itself bitwise
+    the replayed `TaskStore.append` sequence.
   * Restart: `AMTLServer.resume(...)` from a rotated checkpoint is
     invisible to subsequent predictions (pending, not-yet-run feedback
     is the one thing a crash loses; clients re-submit — the standard
-    at-most-once queue contract).
+    at-most-once queue contract).  `checkpoint()` writes the store
+    (when one exists) FIRST under `<ckpt_dir>/store/` at the same
+    step, then the engine state: resume restores the engine at its
+    newest step and the store record paired with it, so the rebuilt
+    problem, engine, and state — and therefore every subsequent
+    prediction and chunk — are bitwise the uninterrupted server's.
 
 Latency-SLO-driven admission (`ServeConfig.slo_ms`): the request path
 records per-batch predict latency into a `LatencySLOController`
@@ -72,6 +96,7 @@ starve the per-chunk event budget.
 from __future__ import annotations
 
 import functools
+import os
 import threading
 import time
 from typing import Any, NamedTuple, Optional
@@ -83,6 +108,7 @@ import numpy as np
 from repro import checkpoint
 from repro.core.amtl import AMTLConfig, make_engine
 from repro.core.losses import MTLProblem, get_loss
+from repro.data.store import TaskStore
 from repro.serve.admission import make_controller
 from repro.serve.learner import BackgroundLearner
 
@@ -187,6 +213,7 @@ class AMTLServer:
         self.problem = problem
         self.cfg = cfg
         self.serve_cfg = serve_cfg
+        self._mesh = mesh
         self.engine = make_engine(problem, cfg, mesh)
         per = self.engine.events_per_step
         if serve_cfg.chunk_events < per \
@@ -219,6 +246,12 @@ class AMTLServer:
                                     per, serve_cfg.slo_window)
         self._delay_offsets = delay_offsets
         self._pending = np.zeros(problem.num_tasks, np.int64)
+        # Label-carrying feedback: accepted (task_id, x_row, y) rows in
+        # arrival order, folded into the store at the next chunk
+        # boundary.  The store itself is created lazily at the first
+        # fold — the label-free path never touches it.
+        self._pending_rows: list[tuple[int, np.ndarray, np.float32]] = []
+        self._store: Optional[TaskStore] = None
         self._rr = 0                       # rotating round-robin offset
         self.chunk_log: list[int] = []     # coalesced chunk sizes, in order
         # Locks, narrowest-scope first (see module doc threading model):
@@ -300,16 +333,46 @@ class AMTLServer:
         return self._serving
 
     # ------------------------------------------------------ feedback path
-    def submit_feedback(self, task_ids) -> FeedbackReceipt:
+    def submit_feedback(self, task_ids, features=None,
+                        labels=None) -> FeedbackReceipt:
         """Enqueue labeled feedback; each accepted item is one future
-        engine event.  Rejected = admission cap hit, SLO shed, or
-        server frozen.  Thread-safe; wakes a running learner."""
+        engine event.
+
+        `features` (k, d) and `labels` (k,) optionally carry the actual
+        labeled rows (all-or-none: both or neither).  An accepted item
+        with a row is folded into the server's `TaskStore` at the next
+        chunk boundary — BEFORE that chunk runs — growing its task's
+        cohort; a rejected item's row is dropped with its event
+        (admission cap hit, SLO shed, or server frozen).  Label-free
+        items (the PR-8 API) remain pure event triggers against the
+        standing data.  Thread-safe; wakes a running learner."""
         t = np.asarray(task_ids, np.int64).reshape(-1)
         if t.size and (t.min() < 0 or t.max() >= self.problem.num_tasks):
             raise ValueError(
                 f"feedback task_ids must be in "
                 f"[0, {self.problem.num_tasks}), got range "
                 f"[{t.min()}, {t.max()}]")
+        if (features is None) != (labels is None):
+            raise ValueError("features and labels must be given together "
+                             "(a labeled row is (x, y)) or both omitted")
+        rows = None
+        if features is not None:
+            if self.cfg.engine == "dense":
+                raise ValueError(
+                    "engine='dense' is the exact uniform baseline and "
+                    "cannot grow ragged cohorts; use engine='delta', "
+                    "'batch', or 'sharded' for label-carrying feedback")
+            x = np.asarray(features, np.float32)
+            if x.ndim == 1:
+                x = x[None, :]
+            y = np.atleast_1d(np.asarray(labels, np.float32))
+            if x.shape != (t.size, self.problem.dim) \
+                    or y.shape != (t.size,):
+                raise ValueError(
+                    f"features must be ({t.size}, {self.problem.dim}) and "
+                    f"labels ({t.size},) for {t.size} task ids; got "
+                    f"{x.shape} and {y.shape}")
+            rows = (x, y)
         if not self.serve_cfg.learning:
             with self._stats_lock:
                 self._n_rejected += t.size
@@ -323,11 +386,14 @@ class AMTLServer:
         cap = self.serve_cfg.max_pending_per_task
         accepted = rejected = 0
         with self._queue_lock:
-            for ti in t:
+            for i, ti in enumerate(t):
                 if cap is not None and self._pending[ti] >= cap:
                     rejected += 1
                 else:
                     self._pending[ti] += 1
+                    if rows is not None:
+                        self._pending_rows.append(
+                            (int(ti), rows[0][i], rows[1][i]))
                     accepted += 1
         with self._stats_lock:
             self._n_rejected += rejected
@@ -375,17 +441,50 @@ class AMTLServer:
                 self._rr = (self._rr + 1) % num_tasks
         return int(taken.sum())
 
-    def _step_once(self) -> int:
-        """One chunk boundary: coalesce -> `engine.run` -> atomic flip.
+    def _fold_pending_rows(self) -> int:
+        """Publish the accepted labeled rows into the store (chunk
+        boundary only; called with the state lock held).
 
-        The engine-side critical section (state lock): the serving
-        snapshot is reassigned as ONE reference only after the new
-        iterate fully materializes, so a concurrent `predict` reads
-        either the previous or the new committed snapshot — never an
-        in-flight one.  Auto-checkpoints on the `checkpoint_every`
-        cadence.  Runs on the learner thread, or inline via `step()`.
+        Drains `_pending_rows` in arrival order, appends them to the
+        store (created lazily from the standing problem at the first
+        fold), and rebuilds the published problem and engine against
+        the new snapshot — the ragged row_counts grew, and capacity may
+        have power-of-two doubled.  The live session STATE is untouched
+        (engine state shapes depend on (d, T, tau), never on the row
+        budget), so the next `engine.run` continues the same session
+        against more data: exactly the paper's nodes streaming new
+        local observations at the central server.  Returns the number
+        of rows folded (0 = nothing changed, no rebuild).
+        """
+        with self._queue_lock:
+            rows, self._pending_rows = self._pending_rows, []
+        if not rows:
+            return 0
+        if self._store is None:
+            self._store = TaskStore.from_problem(self.problem)
+        tids = np.asarray([r[0] for r in rows], np.int64)
+        xs = np.stack([r[1] for r in rows])
+        ys = np.asarray([r[2] for r in rows], np.float32)
+        self._store.append(tids, xs, ys)
+        self.problem = self._store.problem()
+        self.engine = make_engine(self.problem, self.cfg, self._mesh)
+        return len(rows)
+
+    def _step_once(self) -> int:
+        """One chunk boundary: fold rows -> coalesce -> `engine.run` ->
+        atomic flip.
+
+        The engine-side critical section (state lock): accepted labeled
+        rows fold into the store FIRST, so the chunk about to run — and
+        every later one — sees them; then the serving snapshot is
+        reassigned as ONE reference only after the new iterate fully
+        materializes, so a concurrent `predict` reads either the
+        previous or the new committed snapshot — never an in-flight
+        one.  Auto-checkpoints on the `checkpoint_every` cadence.  Runs
+        on the learner thread, or inline via `step()`.
         """
         with self._state_lock:
+            self._fold_pending_rows()
             n = self._coalesce()
             if n == 0:
                 return 0
@@ -442,20 +541,25 @@ class AMTLServer:
             return 0
         return self._learner.stop(drain=drain, timeout=timeout)
 
-    def serve(self, task_ids, features, feedback_task_ids=None):
+    def serve(self, task_ids, features, feedback_task_ids=None,
+              feedback_features=None, feedback_labels=None):
         """One request batch: predict, enqueue feedback, run one chunk.
 
         Predictions are scored against the CURRENT committed snapshot
         before the chunk runs — this batch's feedback affects the NEXT
         batch's predictions, which is what lets the request path never
-        block on learning.  With the background learner running, the
-        chunk step is left to it (ran = 0 here).  Returns (predictions,
-        FeedbackReceipt, events_learned).
+        block on learning.  `feedback_features`/`feedback_labels`
+        optionally carry the labeled rows (see `submit_feedback`).
+        With the background learner running, the chunk step is left to
+        it (ran = 0 here).  Returns (predictions, FeedbackReceipt,
+        events_learned).
         """
         preds = self.predict(task_ids, features)
         receipt = FeedbackReceipt(0, 0)
         if feedback_task_ids is not None:
-            receipt = self.submit_feedback(feedback_task_ids)
+            receipt = self.submit_feedback(feedback_task_ids,
+                                           feedback_features,
+                                           feedback_labels)
         ran = 0 if self.learner_running else self.step()
         return preds, receipt, ran
 
@@ -463,10 +567,22 @@ class AMTLServer:
     def checkpoint(self) -> Optional[str]:
         """Write the engine state as `step_<event>.npz`, rotated to
         `keep_last`.  Returns the written path (None if no ckpt_dir).
-        Serialized against the chunk runner by the state lock."""
+        Serialized against the chunk runner by the state lock.
+
+        When a store exists (labeled rows were folded), its buffers are
+        written FIRST, under `<ckpt_dir>/store/` at the SAME step: a
+        crash between the two writes leaves an unpaired NEWER store
+        record — which resume tolerates — never an engine state whose
+        data is missing.  A label-free server writes no store subdir
+        at all (the PR-8 on-disk layout, byte for byte)."""
         if self.serve_cfg.ckpt_dir is None:
             return None
         with self._state_lock:
+            if self._store is not None:
+                self._store.save(
+                    os.path.join(self.serve_cfg.ckpt_dir, "store"),
+                    int(self._state.event),
+                    keep_last=self.serve_cfg.keep_last)
             path = checkpoint.save(self.serve_cfg.ckpt_dir,
                                    int(self._state.event), self._state,
                                    keep_last=self.serve_cfg.keep_last)
@@ -484,7 +600,16 @@ class AMTLServer:
         state actually served materializes a serving snapshot.  The
         restored server's snapshot — and therefore every subsequent
         prediction — is bitwise the uninterrupted server's at the same
-        chunk boundary."""
+        chunk boundary.
+
+        If the checkpoint has a paired store record (labeled rows had
+        been folded), the store is restored FIRST and the problem and
+        engine are rebuilt from its snapshot — `problem` then only
+        seeds the restored buffers' layout witness — so the resumed
+        session continues against exactly the grown cohorts it was
+        checkpointed with.  Engine state shapes never depend on the row
+        budget, so the fresh init state remains a valid `like` layout
+        for `restore` either way."""
         server = cls.__new__(cls)
         server._configure(problem, cfg, v0, key, serve_cfg, mesh=mesh,
                           delay_offsets=delay_offsets)
@@ -493,9 +618,28 @@ class AMTLServer:
         step = checkpoint.latest_step(d) if d is not None else None
         if step is None:
             server._install_state(init_state)
-        else:
-            server._install_state(checkpoint.restore(d, step,
-                                                     like=init_state))
+            return server
+        store_dir = os.path.join(d, "store")
+        try:
+            store = TaskStore.restore(store_dir, step, problem.loss_name,
+                                      problem.reg_name, problem.lam)
+        except FileNotFoundError:
+            # No record at exactly `step`: either a label-free session
+            # (no store subdir — the common case) or a crash landed
+            # between the store write and the engine write, leaving one
+            # unpaired newer store record.  Take the newest record when
+            # one exists — it holds a superset of the paired rows (the
+            # engine state at `step` never saw the extras, and appends
+            # only ever affect FUTURE chunks).
+            newer = checkpoint.latest_step(store_dir)
+            store = None if newer is None else TaskStore.restore(
+                store_dir, newer, problem.loss_name, problem.reg_name,
+                problem.lam)
+        if store is not None:
+            server._store = store
+            server.problem = store.problem()
+            server.engine = make_engine(server.problem, cfg, mesh)
+        server._install_state(checkpoint.restore(d, step, like=init_state))
         return server
 
     # ---------------------------------------------------------- telemetry
@@ -507,6 +651,12 @@ class AMTLServer:
     def pending_feedback(self) -> int:
         return int(self._pending.sum())
 
+    @property
+    def store_rows(self) -> Optional[int]:
+        """Total rows in the store (None until labeled rows fold)."""
+        store = self._store
+        return None if store is None else store.num_rows
+
     def stats(self) -> dict[str, Any]:
         out = {
             "requests": self._n_requests,
@@ -514,6 +664,8 @@ class AMTLServer:
             "events": self.event_count,
             "chunks": len(self.chunk_log),
             "pending_feedback": self.pending_feedback,
+            "pending_rows": len(self._pending_rows),
+            "store_rows": self.store_rows,
             "rejected_feedback": self._n_rejected,
             "shed_feedback": self._n_shed,
             "learning": self.serve_cfg.learning,

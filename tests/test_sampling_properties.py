@@ -246,6 +246,117 @@ def test_delta_and_batch_engines_agree_bitwise_with_minibatching(
     assert int(d_st.event) == int(b_st.event) == 12
 
 
+# --------------------------------------------------- ragged row masking
+#
+# PR 9: `MTLProblem.row_counts` restricts every loss, gradient, and
+# minibatch selection to each task's first n_t rows of the shared padded
+# buffer.  Deterministic sweeps live in tests/test_taskstore.py; here
+# hypothesis drives arbitrary (n, batch_size, n_t, seed) configurations.
+
+
+@st.composite
+def _masked_setups(draw):
+    n = draw(st.integers(1, 700))           # crosses the 512 block boundary
+    b = draw(st.integers(1, 700))
+    n_t = draw(st.integers(0, n))           # incl. empty and full cohorts
+    seed = draw(st.integers(0, 2**32 - 1))
+    return n, b, n_t, seed
+
+
+@settings(max_examples=40, deadline=None)
+@given(_masked_setups())
+def test_masked_cutoff_keeps_exactly_min_b_nt_valid_rows(setup):
+    """The valid-row cutoff law: exactly min(b, n_t) rows survive, all of
+    them valid, the kernel emits the oracle's bits, and n_t == n reduces
+    bitwise to the unmasked selection."""
+    n, b, n_t, seed = setup
+    seed_j = jnp.asarray(seed, jnp.uint32)
+    nt = jnp.asarray(n_t, jnp.int32)
+    want = np.asarray(ref.sample_mask_masked_ref(n, b, seed_j, nt))
+    assert want.sum() == min(b, n_t)
+    assert not want[n_t:].any()
+    got = np.asarray(ops.sample_mask(n, b, seed_j, n_t=nt, interpret=True))
+    np.testing.assert_array_equal(got, want)
+    if n_t == n:
+        np.testing.assert_array_equal(
+            want, np.asarray(ref.sample_mask_ref(n, b, seed_j)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 40), st.integers(0, 40))
+def test_masked_grad_matches_trimmed_dense_grad(seed, n, n_t_raw):
+    """The masked lstsq gradient over a padded (n, d) buffer equals the
+    dense gradient over the trimmed (n_t, d) cohort — ulp-tight, not
+    bitwise (XLA reassociates across contraction sizes) — and the
+    saturated sampled op equals the masked full grad bitwise."""
+    n_t = min(n_t_raw, n)
+    d = 7
+    kx, kw, ky = jax.random.split(jax.random.PRNGKey(seed % 2**31), 3)
+    x = jax.random.normal(kx, (n, d), jnp.float32)
+    w = jax.random.normal(kw, (d,), jnp.float32)
+    y = jax.random.normal(ky, (n,), jnp.float32)
+    nt = jnp.asarray(n_t, jnp.int32)
+    got = np.asarray(ref.lstsq_grad_masked_ref(x, w, y, nt), np.float64)
+    x64 = np.asarray(x, np.float64)[:n_t]
+    y64 = np.asarray(y, np.float64)[:n_t]
+    want = 2.0 * (x64.T @ (x64 @ np.asarray(w, np.float64) - y64))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    sat = ops.lstsq_grad_sampled(x, w, y, jnp.asarray(seed, jnp.uint32),
+                                 batch_size=n, n_t=nt, use_pallas=False)
+    np.testing.assert_array_equal(
+        np.asarray(sat), np.asarray(ops.lstsq_grad(x, w, y, n_t=nt,
+                                                   use_pallas=False)))
+
+
+@st.composite
+def _ragged_stream_setups(draw):
+    engine = draw(st.sampled_from(["delta", "batch", "sharded"]))
+    counts = draw(st.lists(st.integers(0, _N), min_size=_T, max_size=_T))
+    batch_size = draw(st.one_of(st.none(), st.integers(1, _N)))
+    split = draw(st.integers(0, 3))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return engine, counts, batch_size, split, seed
+
+
+@settings(max_examples=15, deadline=None)
+@given(_ragged_stream_setups())
+def test_row_counts_and_appends_leave_event_stream_untouched(setup):
+    """row_counts — and a mid-session append that rebuilds the engine
+    against a grown buffer — must not perturb the PRNG chain head or the
+    (task, staleness) history: activation sampling is data-independent,
+    so every staleness/shard-invariance contract survives raggedness."""
+    engine, counts, batch_size, split, seed = setup
+    problem = _tiny_problem()
+    ragged = problem._replace(row_counts=jnp.asarray(counts, jnp.int32))
+    eb = 2 if engine in ("batch", "sharded") else 1
+    cfg = AMTLConfig(eta=1.0 / problem.lipschitz(), eta_k=0.6, tau=2,
+                     engine=engine, event_batch=eb, prox_every=2,
+                     batch_size=batch_size)
+    mesh = None
+    if engine == "sharded":
+        from repro.launch.mesh import make_task_mesh
+        mesh = make_task_mesh(1)
+    eng_u = make_engine(problem, cfg, mesh)
+    eng_r = make_engine(ragged, cfg, mesh)
+    w0 = jnp.zeros((_D, _T), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    st_u = eng_u.run(eng_u.init(w0, key), None, 8)
+    # ragged run with a mid-session append at `split` batches: pad one
+    # more row onto every task's buffer and bump the counts — the
+    # engine-rebuild boundary the serving platform crosses at a fold
+    st_r = eng_r.run(eng_r.init(w0, key), None, 2 * split)
+    grown = ragged._replace(
+        xs=jnp.pad(ragged.xs, ((0, 0), (0, 1), (0, 0))),
+        ys=jnp.pad(ragged.ys, ((0, 0), (0, 1))),
+        row_counts=ragged.row_counts + 1)
+    eng_g = make_engine(grown, cfg, mesh)
+    st_r = eng_g.run(st_r, None, 8 - 2 * split)
+    np.testing.assert_array_equal(np.asarray(st_u.key), np.asarray(st_r.key))
+    np.testing.assert_array_equal(np.asarray(st_u.history.buf),
+                                  np.asarray(st_r.history.buf))
+    assert int(st_r.event) == 8
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 2**31 - 1), st.integers(1, _N))
 def test_minibatching_leaves_event_stream_untouched(seed, batch_size):
