@@ -37,8 +37,19 @@ trajectories across PRs.  Keys:
     events_per_sec_learning     engine events absorbed/sec while serving
     appends_per_sec             labeled rows ingested/sec (cooperative)
     learning_slowdown           frozen/learning requests/sec ratio
+    learner_restarts            crashes healed in the chaos drive (PR 10)
+    quarantined_feedback        events quarantined by the non-finite
+                                guard in the chaos drive
+    recovery_ms                 crash-detect -> re-serving wall ms, per
+                                healed crash
     config                      problem + traffic shape (incl. slo_ms and
                                 the `ragged` row_counts summary)
+
+The chaos drive (PR 10) replays the threaded traffic once more under a
+scripted `FaultPlan` — one learner crash healed by the supervisor, one
+poisoned iterate quarantined by the non-finite guard — and reports the
+recovery telemetry; it is correctness plumbing exercised at bench
+scale, not a timed row.
 
 Serving equivalence (frozen == frozen engine bitwise, learning == plain
 `run` over the same chunks bitwise, threaded snapshots == committed
@@ -56,7 +67,7 @@ import numpy as np
 
 from benchmarks.common import Row
 from repro.core import AMTLConfig, MTLProblem, amtl_max_step
-from repro.serve import AMTLServer, ServeConfig
+from repro.serve import AMTLServer, FaultPlan, ServeConfig
 
 D_S, T_S, N_S, TAU_S = 1024, 32, 8, 8
 EVENT_BATCH = 8
@@ -101,12 +112,17 @@ def _traffic(problem: MTLProblem, seed: int = 0):
 
 
 def _server(problem: MTLProblem, learning: bool,
-            slo_ms: float | None = None) -> AMTLServer:
+            slo_ms: float | None = None,
+            fault_plan: FaultPlan | None = None,
+            restart_limit: int | None = None) -> AMTLServer:
     w0 = jnp.zeros((problem.dim, problem.num_tasks), jnp.float32)
     return AMTLServer(problem, _cfg(), w0, jax.random.PRNGKey(7),
                       ServeConfig(chunk_events=CHUNK_EVENTS,
                                   learning=learning, max_batch=BATCH_REQ,
-                                  slo_ms=slo_ms))
+                                  slo_ms=slo_ms,
+                                  restart_limit=restart_limit,
+                                  restart_backoff_s=0.01),
+                      fault_plan=fault_plan)
 
 
 def _drive(problem: MTLProblem, learning: bool):
@@ -154,6 +170,30 @@ def _drive_threaded(problem: MTLProblem):
     return total, lat_ms, violations, events
 
 
+def _drive_chaos(problem: MTLProblem):
+    """Threaded traffic under a scripted FaultPlan: one learner crash
+    (healed by the supervisor under backoff) and one poisoned iterate
+    (quarantined by the non-finite guard).  Returns the server's health
+    telemetry after a full drain — the serving row's recovery keys."""
+    plan = FaultPlan(crash_on_chunks={1}, poison_iterate_on_chunks={3})
+    server = _server(problem, learning=True, fault_plan=plan,
+                     restart_limit=1)
+    t, x, fb, fb_x, fb_y = _traffic(problem)
+    server.start_learner()
+    for i in range(N_BATCHES):
+        jax.block_until_ready(server.predict(t[i], x[i]))
+        server.submit_feedback(fb[i], fb_x[i], fb_y[i])
+    # let the heal land before stopping: a crash inside the stop-drain
+    # window is (correctly) surfaced rather than healed, which is the
+    # breaker contract, not the telemetry this drive reports
+    deadline = time.perf_counter() + 60.0
+    while (server.stats()["health"]["learner_restarts"] < 1
+           and time.perf_counter() < deadline):
+        time.sleep(0.01)
+    server.stop_learner(drain=True)
+    return server.stats()["health"]
+
+
 def run(repeats: int = 3) -> list[Row]:
     problem = _problem()
     # warm-up: compile predict (both padded shapes are the same bucket),
@@ -174,6 +214,7 @@ def run(repeats: int = 3) -> list[Row]:
         total, lat, viol, _ = _drive_threaded(problem)
         if total < best_thread:
             best_thread, lat_thread, violations = total, lat, viol
+    health = _drive_chaos(problem)
 
     rps_learn = n_requests / best_learn
     rps_frozen = n_requests / best_frozen
@@ -189,6 +230,9 @@ def run(repeats: int = 3) -> list[Row]:
         "events_per_sec_learning": events / best_learn,
         "appends_per_sec": appends / best_learn,
         "learning_slowdown": rps_frozen / max(rps_learn, 1e-12),
+        "learner_restarts": int(health["learner_restarts"]),
+        "quarantined_feedback": int(health["quarantined_feedback"]),
+        "recovery_ms": [float(ms) for ms in health["recovery_ms"]],
         "config": {"d": D_S, "T": T_S, "n_samples": N_S, "tau": TAU_S,
                    "engine": "batch", "event_batch": EVENT_BATCH,
                    "chunk_events": CHUNK_EVENTS,
@@ -226,4 +270,9 @@ def run(repeats: int = 3) -> list[Row]:
         Row("serving/predict_latency", 1e3 * row["predict_p50_ms"],
             f"p50={row['predict_p50_ms']:.2f}ms "
             f"p95={row['predict_p95_ms']:.2f}ms batch={BATCH_REQ}"),
+        Row("serving/chaos_recovery",
+            1e3 * (row["recovery_ms"][0] if row["recovery_ms"] else 0.0),
+            f"restarts={row['learner_restarts']} "
+            f"quarantined={row['quarantined_feedback']} "
+            f"crashes={health['learner_crashes']}"),
     ]

@@ -14,6 +14,13 @@ the background learner thread (PR 8) with a latency SLO: predictions
 flow from the main thread while the learner absorbs feedback
 concurrently, and after the drain the session state is still bitwise
 ONE plain `engine.run` over the coalesced chunk log.
+
+The closing chaos part (PR 10) replays a session under a scripted
+`FaultPlan` driving all four injected fault types — NaN feedback
+rejected at admission, a learner-thread crash healed by the supervisor,
+a poisoned iterate quarantined with its folded rows rolled back, and a
+crash between the store and engine checkpoint writes bridged by
+`resume` — with the served snapshot finite throughout.
 """
 import os
 import tempfile
@@ -23,7 +30,7 @@ import numpy as np
 
 from repro.core import AMTLConfig
 from repro.data import make_mtl_problem
-from repro.serve import AMTLServer, ServeConfig
+from repro.serve import AMTLServer, FaultPlan, InjectedFault, ServeConfig
 
 BATCHES = 12
 REQUESTS = 16          # prediction rows per request batch
@@ -117,8 +124,83 @@ def main():
         assert np.array_equal(np.asarray(server.iterate()),
                               np.asarray(eng.iterate(state))), \
             "threaded serving must replay the chunk log bitwise"
+
+    _chaos_part(problem, cfg, w0, key, t, x)
     print("OK: learning-while-serving with QoS, rotating checkpoints, a "
-          "restart-transparent resume, and a concurrent learner thread.")
+          "restart-transparent resume, a concurrent learner thread, and "
+          "scripted-fault recovery (restart, quarantine, torn checkpoint).")
+
+
+def _chaos_part(problem, cfg, w0, key, t, x):
+    """Drive all four injected fault types against one supervised
+    session and show every recovery contract holding."""
+    import time
+
+    rng = np.random.default_rng(1)
+
+    def rows(k, seed):
+        r = np.random.default_rng(seed)
+        return (r.integers(0, problem.num_tasks, size=k),
+                (r.standard_normal((k, problem.dim))
+                 / np.sqrt(problem.dim)).astype(np.float32),
+                r.standard_normal(k).astype(np.float32))
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        plan = FaultPlan(nan_feedback=[(0, 2)],      # labeled call 0, row 2
+                         crash_on_chunks={1},        # learner dies, heals
+                         poison_iterate_on_chunks={3},   # quarantined
+                         fail_checkpoint_calls={1})  # store/engine split
+        serve_cfg = ServeConfig(chunk_events=4, ckpt_dir=ckpt_dir,
+                                restart_limit=2, restart_backoff_s=0.01)
+        server = AMTLServer(problem, cfg, w0, key, serve_cfg,
+                            fault_plan=plan)
+
+        # 1) non-finite feedback dies at admission, not in the kernel
+        receipt = server.submit_feedback(*rows(4, 0))
+        print(f"[chaos] NaN feedback: {receipt.accepted} accepted, "
+              f"{receipt.rejected} rejected (reason={receipt.reason})")
+        assert receipt.reason == "nonfinite"
+
+        # 2+3) supervised learner: scripted crash healed under backoff,
+        # scripted iterate poison quarantined (folded rows rolled back)
+        server.start_learner()
+        for i in range(10):
+            server.predict(t[i % len(t)], x[i % len(x)])
+            server.submit_feedback(
+                rng.integers(0, problem.num_tasks, size=4))
+        deadline = time.perf_counter() + 60.0
+        while time.perf_counter() < deadline:
+            health = server.stats()["health"]
+            if (health["learner_restarts"] >= 1
+                    and health["nonfinite_chunks"] >= 1):
+                break
+            time.sleep(0.01)
+        server.stop_learner(drain=True)
+        health = server.stats()["health"]
+        print(f"[chaos] crash healed: restarts={health['learner_restarts']}"
+              f" recovery_ms={[round(ms, 1) for ms in health['recovery_ms']]}"
+              f" | quarantined={health['quarantined_feedback']} events "
+              f"across {health['nonfinite_chunks']} poisoned chunk(s)")
+        assert health["learner_restarts"] >= 1
+        assert health["nonfinite_chunks"] >= 1
+        assert np.isfinite(np.asarray(server.iterate())).all(), \
+            "the served snapshot must never go non-finite"
+
+        # 4) checkpoint crash-split: the scripted kill lands between the
+        # store write and the engine write; resume bridges the tear
+        server.checkpoint()                    # call 0: whole record pair
+        server.submit_feedback(rng.integers(0, problem.num_tasks, size=4))
+        server.step()
+        try:
+            server.checkpoint()                # call 1: torn mid-pair
+        except InjectedFault:
+            print("[chaos] checkpoint torn between store and engine "
+                  "writes (scripted)")
+        resumed = AMTLServer.resume(problem, cfg, w0, key, serve_cfg)
+        print(f"[chaos] resumed at event {resumed.event_count} from the "
+              f"surviving record pair")
+        assert resumed.event_count > 0
+        assert np.isfinite(np.asarray(resumed.iterate())).all()
 
 
 if __name__ == "__main__":

@@ -1,3 +1,6 @@
-from repro.checkpoint.checkpoint import latest_step, restore, save
+from repro.checkpoint.checkpoint import (CheckpointCorruptError, latest_step,
+                                         latest_valid_step, record_steps,
+                                         restore, save, verify)
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "latest_valid_step",
+           "record_steps", "verify", "CheckpointCorruptError"]

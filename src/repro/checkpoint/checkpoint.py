@@ -10,17 +10,48 @@ here: restore with `like=engine.init(...)` and the next `engine.run`
 resumes the event stream bitwise.  A record whose key set, shapes, or
 dtypes disagree with `like` fails loudly, naming the drifted entries — a
 layout change in a state NamedTuple cannot silently misload a checkpoint.
+
+Integrity: `save` embeds a per-leaf CRC32 manifest under the reserved
+`__manifest__` key and fsyncs the record before the `os.replace`, so a
+record either lands whole or not at all.  `verify` checks one record
+against its manifest without rebuilding the pytree; `restore` runs the
+same check and raises `CheckpointCorruptError` (naming the damaged
+leaves) instead of surfacing an opaque zip error; `latest_valid_step`
+walks records newest-first and returns the newest one that verifies —
+a torn write or bit rot on the newest record costs at most one
+checkpoint interval, never the session.  Records written before the
+manifest existed still `restore` (no CRC cover) but fail `verify`.
 """
 from __future__ import annotations
 
+import json
 import os
 import re
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 _SEP = "||"
+MANIFEST_KEY = "__manifest__"
+_TMP_RE = re.compile(r"step_\d+\.npz\.tmp\.npz$")
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint record failed integrity verification.
+
+    `path` is the offending record; `damaged` lists the flattened leaf
+    keys whose bytes disagree with the manifest (empty when the record
+    is unreadable as a whole — torn zip, missing manifest).
+    """
+
+    def __init__(self, path: str, damaged: list[str], detail: str):
+        self.path = path
+        self.damaged = list(damaged)
+        suffix = f" (damaged leaves: {self.damaged})" if self.damaged else ""
+        super().__init__(f"corrupt checkpoint {path}: {detail}{suffix}")
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -33,9 +64,36 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     return out
 
 
+def _manifest_array(flat: dict[str, np.ndarray]) -> np.ndarray:
+    crcs = {k: zlib.crc32(np.ascontiguousarray(v).tobytes())
+            for k, v in flat.items()}
+    blob = json.dumps(crcs, sort_keys=True).encode("utf-8")
+    return np.frombuffer(blob, dtype=np.uint8)
+
+
+def _sweep_tmp_litter(ckpt_dir: str, keep: str) -> None:
+    # A process that died between np.savez and os.replace leaves its
+    # step_*.npz.tmp.npz behind forever; the next save in the same
+    # directory sweeps it.  Saves within one directory are serialized
+    # by the callers (the server checkpoints under its state lock), so
+    # the only matching tmp file not ours is litter.
+    for fname in os.listdir(ckpt_dir):
+        if _TMP_RE.match(fname) and fname != keep:
+            try:
+                os.remove(os.path.join(ckpt_dir, fname))
+            except OSError:
+                pass  # racing sweeper or permissions: litter, not data
+
+
 def save(ckpt_dir: str, step: int, tree: Any,
          keep_last: Optional[int] = None) -> str:
     """Write `tree` as `step_<step>.npz`; optionally rotate old steps.
+
+    The record embeds a per-leaf CRC32 manifest (`__manifest__`) and is
+    flushed + fsynced before the atomic `os.replace`, so a crash at any
+    point leaves either the previous record set or the new one — never
+    a half-written `step_*.npz`.  Stale `step_*.npz.tmp.npz` litter from
+    an earlier crash is swept first.
 
     `keep_last=k` deletes `step_*.npz` records beyond the k newest (by
     step number) AFTER the write lands — a failed save never eats
@@ -52,7 +110,14 @@ def save(ckpt_dir: str, step: int, tree: Any,
     os.makedirs(ckpt_dir, exist_ok=True)
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     tmp = path + ".tmp.npz"
-    np.savez(tmp, **_flatten(tree))
+    _sweep_tmp_litter(ckpt_dir, keep=os.path.basename(tmp))
+    flat = _flatten(tree)
+    payload = dict(flat)
+    payload[MANIFEST_KEY] = _manifest_array(flat)
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
     if keep_last is not None:
         # Rank records by parsed step but delete the FILENAME that
@@ -63,7 +128,7 @@ def save(ckpt_dir: str, step: int, tree: Any,
         # never deleted, so the returned path always exists on return.
         just_written = os.path.basename(path)
         records = sorted(((int(m.group(1)), f) for f in os.listdir(ckpt_dir)
-                          if (m := re.match(r"step_(\d+)\.npz$", f))),
+                          if (m := _STEP_RE.match(f))),
                          key=lambda r: (r[0], r[1] == just_written))
         for _, fname in records[:-keep_last]:
             if fname != just_written:
@@ -71,12 +136,82 @@ def save(ckpt_dir: str, step: int, tree: Any,
     return path
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def record_steps(ckpt_dir: str) -> list[int]:
+    """Distinct recorded steps, newest first ([] for no/absent dir)."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
-             if (m := re.match(r"step_(\d+)\.npz$", f))]
-    return max(steps) if steps else None
+        return []
+    steps = {int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := _STEP_RE.match(f))}
+    return sorted(steps, reverse=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = record_steps(ckpt_dir)
+    return steps[0] if steps else None
+
+
+def verify(path: str) -> dict[str, int]:
+    """Check one record's per-leaf CRC32 manifest without unflattening.
+
+    Returns the verified manifest (flat leaf key -> CRC32).  Raises
+    `CheckpointCorruptError` when the record is unreadable (torn zip),
+    carries no manifest (pre-manifest record or truncated write), names
+    leaves absent from the manifest or vice versa, or any leaf's bytes
+    disagree with its recorded CRC.  FileNotFoundError passes through
+    untouched — a missing record is not a corrupt one.
+    """
+    try:
+        with np.load(path) as data:
+            if MANIFEST_KEY not in data.files:
+                raise CheckpointCorruptError(
+                    path, [], "record carries no integrity manifest "
+                    "(pre-manifest save or truncated write)")
+            manifest = json.loads(bytes(data[MANIFEST_KEY]).decode("utf-8"))
+            keys = [k for k in data.files if k != MANIFEST_KEY]
+            drifted = (sorted(set(keys) - set(manifest))
+                       + sorted(set(manifest) - set(keys)))
+            if drifted:
+                raise CheckpointCorruptError(
+                    path, drifted, "leaf set disagrees with the manifest")
+            damaged = []
+            for key in keys:
+                try:
+                    arr = data[key]
+                    ok = (zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                          == manifest[key])
+                except Exception:  # zip's own CRC / truncation mid-entry
+                    ok = False
+                if not ok:
+                    damaged.append(key)
+            if damaged:
+                raise CheckpointCorruptError(
+                    path, damaged, "leaf bytes fail their CRC32")
+            return manifest
+    except (CheckpointCorruptError, FileNotFoundError):
+        raise
+    except Exception as e:  # bad zip, json rot, short central directory
+        raise CheckpointCorruptError(path, [], f"unreadable record: {e!r}")
+
+
+def latest_valid_step(ckpt_dir: str,
+                      like: Any = None) -> Optional[int]:
+    """Newest step whose record verifies; None when no record does.
+
+    Walks records newest-first, skipping any that fail `verify` (torn
+    write, bit rot, missing manifest).  With `like`, a record whose
+    manifest key set disagrees with `like`'s flattened layout is also
+    skipped — a foreign record can't be mistaken for a resumable one.
+    """
+    want = set(_flatten(like)) if like is not None else None
+    for step in record_steps(ckpt_dir):
+        try:
+            manifest = verify(_resolve_step_path(ckpt_dir, step))
+        except (CheckpointCorruptError, FileNotFoundError):
+            continue
+        if want is not None and set(manifest) != want:
+            continue
+        return step
+    return None
 
 
 def _resolve_step_path(ckpt_dir: str, step: int) -> str:
@@ -96,7 +231,7 @@ def _resolve_step_path(ckpt_dir: str, step: int) -> str:
     if os.path.isdir(ckpt_dir):
         matches = sorted(
             f for f in os.listdir(ckpt_dir)
-            if (m := re.match(r"step_(\d+)\.npz$", f))
+            if (m := _STEP_RE.match(f))
             and int(m.group(1)) == step)
         if matches and padded not in matches:
             return os.path.join(ckpt_dir, matches[0])
@@ -106,36 +241,65 @@ def _resolve_step_path(ckpt_dir: str, step: int) -> str:
 def restore(ckpt_dir: str, step: int, like: Any,
             shardings: Any = None) -> Any:
     path = _resolve_step_path(ckpt_dir, step)
-    data = np.load(path)
-    flat_like = jax.tree_util.tree_flatten_with_path(like)
-    want_keys = [_SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
-                           for k in kpath)
-                 for kpath, _ in flat_like[0]]
-    missing = [k for k in want_keys if k not in data]
-    extra = sorted(set(data.files) - set(want_keys))
-    if missing or extra:
-        raise ValueError(
-            f"checkpoint {path} does not match the `like` pytree layout: "
-            f"missing keys {missing}, unexpected keys {extra} — was the "
-            "state's structure changed since this checkpoint was saved?")
-    leaves = []
-    sh_leaves = (jax.tree_util.tree_leaves(
-        shardings, is_leaf=lambda x: hasattr(x, "spec"))
-        if shardings is not None else None)
-    for i, ((kpath, leaf), key) in enumerate(zip(flat_like[0], want_keys)):
-        arr = data[key]
-        if arr.shape != tuple(getattr(leaf, "shape", arr.shape)):
+    try:
+        data = np.load(path)
+    except FileNotFoundError:
+        raise
+    except Exception as e:
+        raise CheckpointCorruptError(path, [], f"unreadable record: {e!r}")
+    with data:
+        manifest = None
+        if MANIFEST_KEY in data.files:
+            try:
+                manifest = json.loads(
+                    bytes(data[MANIFEST_KEY]).decode("utf-8"))
+            except Exception as e:
+                raise CheckpointCorruptError(
+                    path, [MANIFEST_KEY], f"unreadable manifest: {e!r}")
+        flat_like = jax.tree_util.tree_flatten_with_path(like)
+        want_keys = [_SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                               for k in kpath)
+                     for kpath, _ in flat_like[0]]
+        missing = [k for k in want_keys if k not in data]
+        extra = sorted(set(data.files) - set(want_keys) - {MANIFEST_KEY})
+        if missing or extra:
             raise ValueError(
-                f"checkpoint {path}: leaf {key!r} has shape {arr.shape} "
-                f"but `like` expects {leaf.shape}")
-        want_dtype = getattr(leaf, "dtype", None)
-        if want_dtype is not None and arr.dtype != want_dtype:
-            raise ValueError(
-                f"checkpoint {path}: leaf {key!r} has dtype {arr.dtype} "
-                f"but `like` expects {want_dtype} — dtype drift would "
-                "silently change the resumed computation")
-        if sh_leaves is not None:
-            leaves.append(jax.device_put(arr, sh_leaves[i]))
-        else:
-            leaves.append(jax.numpy.asarray(arr))
+                f"checkpoint {path} does not match the `like` pytree layout: "
+                f"missing keys {missing}, unexpected keys {extra} — was the "
+                "state's structure changed since this checkpoint was saved?")
+        leaves = []
+        sh_leaves = (jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))
+            if shardings is not None else None)
+        damaged = []
+        for i, ((kpath, leaf), key) in enumerate(zip(flat_like[0],
+                                                     want_keys)):
+            try:
+                arr = data[key]
+            except Exception:  # zip-level CRC failure / truncated entry
+                damaged.append(key)
+                continue
+            if manifest is not None and (
+                    key not in manifest
+                    or zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                    != manifest[key]):
+                damaged.append(key)
+                continue
+            if arr.shape != tuple(getattr(leaf, "shape", arr.shape)):
+                raise ValueError(
+                    f"checkpoint {path}: leaf {key!r} has shape {arr.shape} "
+                    f"but `like` expects {leaf.shape}")
+            want_dtype = getattr(leaf, "dtype", None)
+            if want_dtype is not None and arr.dtype != want_dtype:
+                raise ValueError(
+                    f"checkpoint {path}: leaf {key!r} has dtype {arr.dtype} "
+                    f"but `like` expects {want_dtype} — dtype drift would "
+                    "silently change the resumed computation")
+            if sh_leaves is not None:
+                leaves.append(jax.device_put(arr, sh_leaves[i]))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        if damaged:
+            raise CheckpointCorruptError(
+                path, damaged, "leaf bytes fail their CRC32")
     return jax.tree_util.tree_unflatten(flat_like[1], leaves)

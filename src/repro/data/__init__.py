@@ -1,8 +1,9 @@
 from repro.data.synthetic import (make_mtl_problem, make_school_like,
                                   make_mnist_like, synthetic_lm_batches)
 from repro.data.pipeline import ShardedBatcher
-from repro.data.store import TaskStore, TaskStoreState, stack_ragged
+from repro.data.store import (StoreUndo, TaskStore, TaskStoreState,
+                              stack_ragged)
 
 __all__ = ["make_mtl_problem", "make_school_like", "make_mnist_like",
            "synthetic_lm_batches", "ShardedBatcher", "TaskStore",
-           "TaskStoreState", "stack_ragged"]
+           "TaskStoreState", "StoreUndo", "stack_ragged"]

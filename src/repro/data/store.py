@@ -37,7 +37,8 @@ from typing import NamedTuple, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.checkpoint import _resolve_step_path, restore, save
+from repro.checkpoint.checkpoint import (CheckpointCorruptError,
+                                         _resolve_step_path, restore, save)
 from repro.core.losses import MTLProblem
 
 
@@ -46,6 +47,18 @@ class TaskStoreState(NamedTuple):
     xs: np.ndarray          # (T, cap, d) float32
     ys: np.ndarray          # (T, cap)    float32
     row_counts: np.ndarray  # (T,)        int32
+
+
+class StoreUndo(NamedTuple):
+    """Inverse of one `append_undoable` call (see `rollback`).
+
+    Holds the pre-append capacity, the full pre-append row_counts, and
+    the prior contents of exactly the slots the append overwrote — O(k)
+    in the appended rows, never a full-buffer snapshot.
+    """
+    capacity: int
+    row_counts: np.ndarray
+    slots: list  # [(task, row, prev_x_row, prev_y), ...] for rows < old cap
 
 
 class TaskStore:
@@ -202,6 +215,46 @@ class TaskStore:
         self._problem = None
         return k
 
+    def append_undoable(self, task_ids, features, labels) -> StoreUndo:
+        """`append` plus an undo token that restores the store BITWISE.
+
+        `rollback(undo)` returns buffers, counts, AND capacity to the
+        pre-append snapshot — capacity matters because a doubling that
+        survived a rolled-back append would change the published buffer
+        shapes and with them the engines' jit cache keys.  The serving
+        platform uses this to quarantine a fold whose chunk produced a
+        non-finite iterate.  The token is only valid against the store
+        state it was issued for (one outstanding undo at a time).
+        """
+        task_ids = np.atleast_1d(np.asarray(task_ids, np.int64))
+        old_cap = self.capacity
+        old_counts = self._row_counts.copy()
+        # Pre-compute the slots this append will write (arrival order)
+        # and snapshot their current bytes; slots at/above the old
+        # capacity vanish when rollback slices the growth away.
+        counts = old_counts.copy()
+        slots = []
+        for t in task_ids:
+            if 0 <= t < self.num_tasks:
+                r = int(counts[t])
+                counts[t] = r + 1
+                if r < old_cap:
+                    slots.append((int(t), r, self._xs[t, r].copy(),
+                                  self._ys[t, r].copy()))
+        self.append(task_ids, features, labels)
+        return StoreUndo(old_cap, old_counts, slots)
+
+    def rollback(self, undo: StoreUndo) -> None:
+        """Undo one `append_undoable`; the store is bitwise pre-append."""
+        if undo.capacity != self.capacity:
+            self._xs = np.ascontiguousarray(self._xs[:, :undo.capacity])
+            self._ys = np.ascontiguousarray(self._ys[:, :undo.capacity])
+        for t, r, x_prev, y_prev in undo.slots:
+            self._xs[t, r] = x_prev
+            self._ys[t, r] = y_prev
+        self._row_counts = undo.row_counts.copy()
+        self._problem = None
+
     def _grow(self, need: int) -> None:
         """Double capacity until `need` rows fit (bounded jit retraces)."""
         cap = max(self.capacity, 1)
@@ -233,15 +286,26 @@ class TaskStore:
         part of the state — growth history must survive a resume or the
         buffer shapes, and with them the jit cache keys, would drift);
         the leaves then go through `repro.checkpoint.restore` against a
-        shape/dtype skeleton for its strict layout validation.
+        shape/dtype skeleton for its strict layout validation.  A torn
+        or corrupt record raises `CheckpointCorruptError` (from the
+        shape read here or the CRC check inside `restore`), never a raw
+        zip error — resume paths catch it and drop to older records.
         """
-        with np.load(_resolve_step_path(ckpt_dir, step)) as record:
-            # Field keys as `repro.checkpoint` path-flattens this
-            # NamedTuple (attribute path per field).
-            like = TaskStoreState(
-                xs=np.empty(record[".xs"].shape, np.float32),
-                ys=np.empty(record[".ys"].shape, np.float32),
-                row_counts=np.empty(record[".row_counts"].shape, np.int32))
+        path = _resolve_step_path(ckpt_dir, step)
+        try:
+            with np.load(path) as record:
+                # Field keys as `repro.checkpoint` path-flattens this
+                # NamedTuple (attribute path per field).
+                like = TaskStoreState(
+                    xs=np.empty(record[".xs"].shape, np.float32),
+                    ys=np.empty(record[".ys"].shape, np.float32),
+                    row_counts=np.empty(record[".row_counts"].shape,
+                                        np.int32))
+        except (FileNotFoundError, CheckpointCorruptError):
+            raise
+        except Exception as e:
+            raise CheckpointCorruptError(
+                path, [], f"unreadable store record: {e!r}")
         state = restore(ckpt_dir, step, like)
         return cls(np.asarray(state.xs), np.asarray(state.ys),
                    np.asarray(state.row_counts), loss_name, reg_name, lam)

@@ -4,21 +4,32 @@ A central `AMTLServer` (`serve.server`) keeps an `AMTLEngine` session
 learning from asynchronously streamed task feedback while serving
 predictions off a committed, atomically-flipped serving snapshot.  The
 chunk runner lives on a background learner thread (`serve.learner`,
-start/stop/drain lifecycle) and a latency-SLO admission controller
-(`serve.admission`) deterministically trades the chunk budget against
-the request path's p95.  The equivalence contract — frozen serving is
-bitwise the frozen engine, feedback-driven serving is bitwise a plain
-`engine.run` over the same coalesced chunks (cooperative or threaded),
-and a checkpoint restart is invisible to subsequent predictions — is
-documented in `repro.serve.server` and enforced by tests/test_serve.py
-and tests/test_serve_threaded.py.
+start/stop/drain lifecycle, optionally supervised with bounded
+auto-restart and a circuit breaker) and a latency-SLO admission
+controller (`serve.admission`) deterministically trades the chunk
+budget against the request path's p95.  Fault tolerance (`serve.faults`
++ the checkpoint integrity layer) makes failure recovery scriptable and
+bitwise-testable: a `FaultPlan` injects deterministic crashes, NaNs,
+and torn checkpoints, and the recovery contracts — restart replays the
+surviving chunk log, resume bridges corrupt records, the served
+snapshot never goes non-finite — are enforced under injection.  The
+equivalence contract — frozen serving is bitwise the frozen engine,
+feedback-driven serving is bitwise a plain `engine.run` over the same
+coalesced chunks (cooperative or threaded), and a checkpoint restart is
+invisible to subsequent predictions — is documented in
+`repro.serve.server` and enforced by tests/test_serve.py,
+tests/test_serve_threaded.py, and tests/test_serve_faults.py.
 """
 from repro.serve.admission import (LatencySLOController, SLODecision,
                                    degraded_budget)
-from repro.serve.learner import BackgroundLearner
+from repro.serve.faults import (FaultPlan, InjectedFault, corrupt_leaf,
+                                truncate_record)
+from repro.serve.learner import BackgroundLearner, LearnerSupervisor
 from repro.serve.server import (AMTLServer, FeedbackReceipt, ServeConfig,
                                 ServingSnapshot)
 
 __all__ = ["AMTLServer", "FeedbackReceipt", "ServeConfig",
-           "ServingSnapshot", "BackgroundLearner", "LatencySLOController",
-           "SLODecision", "degraded_budget"]
+           "ServingSnapshot", "BackgroundLearner", "LearnerSupervisor",
+           "LatencySLOController", "SLODecision", "degraded_budget",
+           "FaultPlan", "InjectedFault", "corrupt_leaf",
+           "truncate_record"]

@@ -92,6 +92,34 @@ at admission, and each chunk consumes at most `task_chunk_quota` events
 per task — drained round-robin from a rotating start offset — so a
 flood on one task can neither evict other tasks' pending feedback nor
 starve the per-chunk event budget.
+
+Fault tolerance (PR 10):
+
+  * Supervised learner: with `ServeConfig.restart_limit` set,
+    `start_learner()` wraps the thread in a `LearnerSupervisor`
+    (`serve.learner`) — a crashed learner auto-restarts under
+    exponential backoff, re-serving the last committed snapshot; once
+    the budget is exhausted the server's circuit breaker latches it
+    into frozen-serving mode (predictions flow, feedback rejected with
+    receipt reason "breaker") and the terminal exception surfaces on
+    `stop_learner()`.  `restart_limit=None` (default) is the PR-8
+    unsupervised learner, byte for byte.
+  * Non-finite guard: `submit_feedback` rejects rows with non-finite
+    features/labels at admission (reason "nonfinite"); `_step_once`
+    checks the freshly materialized iterate with one `isfinite`
+    reduction BEFORE the flip — on failure the chunk is discarded, the
+    engine state stays at the last committed one, the rows folded at
+    that boundary are rolled back out of the store bitwise
+    (`TaskStore.rollback`), and the coalesced events are quarantined
+    (logged per task in `stats()["health"]`, never re-queued).  The
+    served snapshot can never go non-finite, and a poisoned chunk can
+    never reach a checkpoint (checkpoints happen after the guard).
+  * Deterministic fault injection: a `serve.faults.FaultPlan` threads
+    scripted failure points (chunk crash, iterate poison, feedback NaN,
+    checkpoint crash-split) through this control flow behind a no-op
+    default; `resume` bridges torn/corrupt records via
+    `checkpoint.latest_valid_step` and drops to older store records on
+    `CheckpointCorruptError`.  Telemetry: `stats()["health"]`.
 """
 from __future__ import annotations
 
@@ -106,11 +134,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint
+from repro.checkpoint import CheckpointCorruptError
 from repro.core.amtl import AMTLConfig, make_engine
 from repro.core.losses import MTLProblem, get_loss
 from repro.data.store import TaskStore
 from repro.serve.admission import make_controller
-from repro.serve.learner import BackgroundLearner
+from repro.serve.faults import FaultPlan
+from repro.serve.learner import BackgroundLearner, LearnerSupervisor
 
 Array = jax.Array
 
@@ -152,6 +182,14 @@ class ServeConfig(NamedTuple):
                          feedback is shed at admission (rejected) so the
                          backlog cannot grow against a violated SLO.
                          Requires slo_ms.
+    restart_limit        fault tolerance: number of learner-thread
+                         crashes `start_learner()`'s supervisor will
+                         auto-restart through before tripping the
+                         circuit breaker (frozen-serving mode).  None
+                         (default) = unsupervised PR-8 learner: a crash
+                         parks until surfaced on stop.
+    restart_backoff_s    base of the supervisor's exponential restart
+                         backoff: crash k waits backoff * 2**k seconds.
     """
     chunk_events: int = 32
     task_chunk_quota: Optional[int] = None
@@ -164,11 +202,40 @@ class ServeConfig(NamedTuple):
     slo_ms: Optional[float] = None
     slo_window: int = 32
     slo_shed: bool = False
+    restart_limit: Optional[int] = None
+    restart_backoff_s: float = 0.05
 
 
-class FeedbackReceipt(NamedTuple):
-    accepted: int          # enqueued for a future chunk
-    rejected: int          # admission-capped, SLO-shed, or server frozen
+class FeedbackReceipt(tuple):
+    """An (accepted, rejected) pair with a `reason` annotation.
+
+    Still compares and unpacks as the plain 2-tuple it has always been
+    (`receipt == (3, 7)`, `a, r = receipt`); `reason` rides along as an
+    instance attribute naming why rows were rejected — None, "frozen",
+    "breaker" (learner circuit breaker latched), "shed" (SLO),
+    "nonfinite" (non-finite features/labels), or "admission" (per-task
+    queue cap).  When one call rejects for several reasons the most
+    severe wins (breaker > frozen > shed > nonfinite > admission).
+    """
+    reason: Optional[str]
+
+    def __new__(cls, accepted: int, rejected: int,
+                reason: Optional[str] = None):
+        self = super().__new__(cls, (int(accepted), int(rejected)))
+        self.reason = reason
+        return self
+
+    @property
+    def accepted(self) -> int:       # enqueued for a future chunk
+        return self[0]
+
+    @property
+    def rejected(self) -> int:       # capped, shed, frozen, or non-finite
+        return self[1]
+
+    def __repr__(self) -> str:
+        return (f"FeedbackReceipt(accepted={self[0]}, rejected={self[1]}, "
+                f"reason={self.reason!r})")
 
 
 class ServingSnapshot(NamedTuple):
@@ -199,14 +266,16 @@ class AMTLServer:
 
     def __init__(self, problem: MTLProblem, cfg: AMTLConfig, v0: Array,
                  key: Array, serve_cfg: ServeConfig = ServeConfig(), *,
-                 mesh=None, delay_offsets: Array | None = None):
+                 mesh=None, delay_offsets: Array | None = None,
+                 fault_plan: Optional[FaultPlan] = None):
         self._configure(problem, cfg, v0, key, serve_cfg, mesh=mesh,
-                        delay_offsets=delay_offsets)
+                        delay_offsets=delay_offsets, fault_plan=fault_plan)
         self._install_state(self.engine.init(v0, key))
 
     def _configure(self, problem: MTLProblem, cfg: AMTLConfig, v0: Array,
                    key: Array, serve_cfg: ServeConfig, *, mesh=None,
-                   delay_offsets: Array | None = None) -> None:
+                   delay_offsets: Array | None = None,
+                   fault_plan: Optional[FaultPlan] = None) -> None:
         """Everything construction-time except building/serving a state
         (shared by `__init__` and `resume`, which install different
         states — the fresh init vs the restored checkpoint)."""
@@ -242,8 +311,20 @@ class AMTLServer:
         if serve_cfg.slo_shed and serve_cfg.slo_ms is None:
             raise ValueError("slo_shed requires slo_ms — there is no "
                              "controller to decide when to shed")
+        if serve_cfg.restart_limit is not None \
+                and serve_cfg.restart_limit < 0:
+            raise ValueError(
+                f"restart_limit must be >= 0 or None, got "
+                f"{serve_cfg.restart_limit} (None = unsupervised learner)")
+        if serve_cfg.restart_backoff_s < 0:
+            raise ValueError(f"restart_backoff_s must be >= 0, got "
+                             f"{serve_cfg.restart_backoff_s}")
         self._slo = make_controller(serve_cfg.slo_ms, serve_cfg.chunk_events,
                                     per, serve_cfg.slo_window)
+        # Fault injection: a no-op plan unless a scripted one is given,
+        # so the guarded control flow is identical with and without
+        # faults armed (each hook is an integer compare).
+        self._faults = fault_plan if fault_plan is not None else FaultPlan()
         self._delay_offsets = delay_offsets
         self._pending = np.zeros(problem.num_tasks, np.int64)
         # Label-carrying feedback: accepted (task_id, x_row, y) rows in
@@ -259,12 +340,19 @@ class AMTLServer:
         self._state_lock = threading.RLock()   # chunk run / checkpoint
         self._queue_lock = threading.Lock()    # pending counters + _rr
         self._stats_lock = threading.Lock()    # request-path counters
-        self._learner: Optional[BackgroundLearner] = None
+        self._learner: Optional[BackgroundLearner | LearnerSupervisor] = None
         self._events_since_ckpt = 0
         self._n_requests = 0
         self._n_predictions = 0
         self._n_rejected = 0
         self._n_shed = 0
+        # Fault-tolerance telemetry (stats()["health"]):
+        self._breaker_exc: Optional[BaseException] = None
+        self._n_breaker_rejected = 0
+        self._n_nonfinite_fb = 0       # rows rejected at admission
+        self._n_nonfinite_chunks = 0   # chunks discarded by the guard
+        self._n_quarantined = 0        # events quarantined by the guard
+        self._quarantine_log: list[dict[int, int]] = []  # per-task counts
 
     def _install_state(self, state) -> None:
         """Serve `state`: materialize its iterate and commit the serving
@@ -343,9 +431,13 @@ class AMTLServer:
         with a row is folded into the server's `TaskStore` at the next
         chunk boundary — BEFORE that chunk runs — growing its task's
         cohort; a rejected item's row is dropped with its event
-        (admission cap hit, SLO shed, or server frozen).  Label-free
-        items (the PR-8 API) remain pure event triggers against the
-        standing data.  Thread-safe; wakes a running learner."""
+        (admission cap hit, SLO shed, non-finite row, latched breaker,
+        or server frozen — the receipt's `reason` says which).  A row
+        whose features or label are not finite is rejected at admission
+        with its event: the engine and the store only ever see finite
+        data.  Label-free items (the PR-8 API) remain pure event
+        triggers against the standing data.  Thread-safe; wakes a
+        running learner."""
         t = np.asarray(task_ids, np.int64).reshape(-1)
         if t.size and (t.min() < 0 or t.max() >= self.problem.num_tasks):
             raise ValueError(
@@ -372,22 +464,35 @@ class AMTLServer:
                     f"features must be ({t.size}, {self.problem.dim}) and "
                     f"labels ({t.size},) for {t.size} task ids; got "
                     f"{x.shape} and {y.shape}")
+            x, y = self._faults.feedback(x, y)  # scripted NaN injection
             rows = (x, y)
+        if self._breaker_exc is not None:
+            with self._stats_lock:
+                self._n_rejected += t.size
+                self._n_breaker_rejected += t.size
+            return FeedbackReceipt(0, int(t.size), reason="breaker")
         if not self.serve_cfg.learning:
             with self._stats_lock:
                 self._n_rejected += t.size
-            return FeedbackReceipt(0, int(t.size))
+            return FeedbackReceipt(0, int(t.size), reason="frozen")
         if self.serve_cfg.slo_shed and self._slo is not None \
                 and self._slo.degraded:
             with self._stats_lock:
                 self._n_rejected += t.size
                 self._n_shed += t.size
-            return FeedbackReceipt(0, int(t.size))
+            return FeedbackReceipt(0, int(t.size), reason="shed")
+        finite = None
+        if rows is not None:
+            finite = (np.isfinite(rows[0]).all(axis=1)
+                      & np.isfinite(rows[1]))
         cap = self.serve_cfg.max_pending_per_task
-        accepted = rejected = 0
+        accepted = rejected = nonfinite = 0
         with self._queue_lock:
             for i, ti in enumerate(t):
-                if cap is not None and self._pending[ti] >= cap:
+                if finite is not None and not finite[i]:
+                    rejected += 1       # the event dies with its row
+                    nonfinite += 1
+                elif cap is not None and self._pending[ti] >= cap:
                     rejected += 1
                 else:
                     self._pending[ti] += 1
@@ -397,12 +502,18 @@ class AMTLServer:
                     accepted += 1
         with self._stats_lock:
             self._n_rejected += rejected
+            self._n_nonfinite_fb += nonfinite
         if accepted and self._learner is not None and self._learner.running:
             self._learner.wake()
-        return FeedbackReceipt(accepted, rejected)
+        reason = None
+        if nonfinite:
+            reason = "nonfinite"
+        elif rejected:
+            reason = "admission"
+        return FeedbackReceipt(accepted, rejected, reason=reason)
 
-    def _coalesce(self) -> int:
-        """Drain the feedback queue into one runnable chunk size.
+    def _coalesce(self) -> np.ndarray:
+        """Drain the feedback queue into one runnable chunk.
 
         Round-robin over tasks from the rotating offset, at most
         `task_chunk_quota` events per task, at most the ADMITTED budget
@@ -411,6 +522,8 @@ class AMTLServer:
         (the floored remainder goes back to the queue, reverse
         consumption order).  Deterministic in the queue contents and
         the admitted budget.  Called with the state lock held.
+        Returns the per-task taken vector (the chunk size is its sum;
+        the non-finite guard quarantines exactly these counts).
         """
         per = self.engine.events_per_step
         budget = (self._slo.chunk_events if self._slo is not None
@@ -439,9 +552,9 @@ class AMTLServer:
             self._pending -= taken
             if taken.any():
                 self._rr = (self._rr + 1) % num_tasks
-        return int(taken.sum())
+        return taken
 
-    def _fold_pending_rows(self) -> int:
+    def _fold_pending_rows(self) -> Optional[tuple]:
         """Publish the accepted labeled rows into the store (chunk
         boundary only; called with the state lock held).
 
@@ -453,26 +566,48 @@ class AMTLServer:
         (engine state shapes depend on (d, T, tau), never on the row
         budget), so the next `engine.run` continues the same session
         against more data: exactly the paper's nodes streaming new
-        local observations at the central server.  Returns the number
-        of rows folded (0 = nothing changed, no rebuild).
+        local observations at the central server.
+
+        Returns None when nothing folded (no rebuild happened), else an
+        undo record `(store_undo, prev_problem, prev_engine, created)`
+        the non-finite guard uses to unwind the fold bitwise: rolling
+        back the store AND reinstating the exact previous problem and
+        engine objects keeps the jit cache keys of the pre-fold session.
         """
         with self._queue_lock:
             rows, self._pending_rows = self._pending_rows, []
         if not rows:
-            return 0
-        if self._store is None:
+            return None
+        created = self._store is None
+        if created:
             self._store = TaskStore.from_problem(self.problem)
         tids = np.asarray([r[0] for r in rows], np.int64)
         xs = np.stack([r[1] for r in rows])
         ys = np.asarray([r[2] for r in rows], np.float32)
-        self._store.append(tids, xs, ys)
+        prev = (self.problem, self.engine)
+        store_undo = self._store.append_undoable(tids, xs, ys)
         self.problem = self._store.problem()
         self.engine = make_engine(self.problem, self.cfg, self._mesh)
-        return len(rows)
+        return (store_undo, prev[0], prev[1], created)
+
+    def _unfold_rows(self, fold: Optional[tuple]) -> None:
+        """Unwind one `_fold_pending_rows` (state lock held): the store,
+        problem, and engine return bitwise to their pre-fold snapshots.
+        A store created BY the rolled-back fold is discarded outright —
+        the session drops back to the label-free path it was on."""
+        if fold is None:
+            return
+        store_undo, prev_problem, prev_engine, created = fold
+        if created:
+            self._store = None
+        else:
+            self._store.rollback(store_undo)
+        self.problem = prev_problem
+        self.engine = prev_engine
 
     def _step_once(self) -> int:
         """One chunk boundary: fold rows -> coalesce -> `engine.run` ->
-        atomic flip.
+        non-finite guard -> atomic flip.
 
         The engine-side critical section (state lock): accepted labeled
         rows fold into the store FIRST, so the chunk about to run — and
@@ -480,16 +615,45 @@ class AMTLServer:
         reassigned as ONE reference only after the new iterate fully
         materializes, so a concurrent `predict` reads either the
         previous or the new committed snapshot — never an in-flight
-        one.  Auto-checkpoints on the `checkpoint_every` cadence.  Runs
-        on the learner thread, or inline via `step()`.
+        one.  The guard checks the materialized iterate with one
+        `isfinite` reduction BEFORE the flip: a non-finite result
+        discards the chunk (state, snapshot, and chunk log untouched),
+        unwinds the boundary's fold, and quarantines the coalesced
+        events (logged per task, not re-queued) — the committed
+        snapshot and every checkpoint stay finite by construction.
+        Auto-checkpoints on the `checkpoint_every` cadence.  Runs on
+        the learner thread, or inline via `step()`.
+
+        Returns the events CONSUMED at this boundary (committed or
+        quarantined), so drain loops always make progress past a
+        poisoned chunk.
         """
         with self._state_lock:
-            self._fold_pending_rows()
-            n = self._coalesce()
+            fold = self._fold_pending_rows()
+            taken = self._coalesce()
+            n = int(taken.sum())
             if n == 0:
                 return 0
+            chunk_idx = self._faults.begin_chunk()
+            self._faults.crash_point(chunk_idx)   # scripted learner crash
             state = self.engine.run(self._state, self._delay_offsets, n)
-            v = jax.block_until_ready(self.engine.iterate(state))
+            v = self.engine.iterate(state)
+            v = self._faults.poison(chunk_idx, v)  # scripted NaN iterate
+            v = jax.block_until_ready(v)
+            if not bool(jnp.isfinite(v).all()):
+                # Quarantine: nothing commits.  The last committed
+                # snapshot keeps serving, the fold unwinds bitwise, and
+                # the chunk's events are logged per task — never
+                # re-queued (re-running the same poison forever is the
+                # one thing worse than losing it).
+                self._unfold_rows(fold)
+                with self._stats_lock:
+                    self._n_nonfinite_chunks += 1
+                    self._n_quarantined += n
+                    self._quarantine_log.append(
+                        {int(t): int(k) for t, k in enumerate(taken)
+                         if k > 0})
+                return n
             self._state = state
             self.chunk_log.append(n)
             self._serving = ServingSnapshot(v, int(state.event))  # the flip
@@ -502,11 +666,12 @@ class AMTLServer:
     def step(self) -> int:
         """Cooperative chunk boundary (single-threaded callers).
 
-        Returns the number of events learned (0 if frozen or nothing
-        runnable yet).  While the background learner is running, chunks
-        belong to it — call `stop_learner()` first.
+        Returns the number of events consumed at the boundary — learned,
+        or quarantined by the non-finite guard (0 if frozen, breaker
+        latched, or nothing runnable yet).  While the background learner
+        is running, chunks belong to it — call `stop_learner()` first.
         """
-        if not self.serve_cfg.learning:
+        if not self.serve_cfg.learning or self._breaker_exc is not None:
             return 0
         if self.learner_running:
             raise RuntimeError(
@@ -519,15 +684,41 @@ class AMTLServer:
     def learner_running(self) -> bool:
         return self._learner is not None and self._learner.running
 
-    def start_learner(self) -> BackgroundLearner:
+    @property
+    def breaker_tripped(self) -> bool:
+        """True once the learner circuit breaker latched the server
+        into frozen-serving mode (predictions flow, feedback rejected,
+        chunks stop).  Latched for the server's lifetime."""
+        return self._breaker_exc is not None
+
+    def _trip_breaker(self, exc: BaseException) -> None:
+        """Called by the supervisor when the restart budget is spent."""
+        with self._stats_lock:
+            self._breaker_exc = exc
+
+    def start_learner(self) -> BackgroundLearner | LearnerSupervisor:
         """Start the background chunk runner (`serve.learner`).  The
         request path keeps serving the committed snapshot throughout;
-        `submit_feedback` wakes the thread."""
+        `submit_feedback` wakes the thread.  With
+        `ServeConfig.restart_limit` set the runner is a
+        `LearnerSupervisor` (bounded auto-restart + circuit breaker);
+        None keeps the PR-8 unsupervised `BackgroundLearner`."""
         if not self.serve_cfg.learning:
             raise RuntimeError("server is frozen (learning=False); there "
                                "is nothing for a learner thread to run")
+        if self._breaker_exc is not None:
+            raise RuntimeError(
+                "learner circuit breaker is latched (restart budget "
+                "exhausted); the server is in frozen-serving mode"
+            ) from self._breaker_exc
         if self._learner is None:
-            self._learner = BackgroundLearner(self)
+            limit = self.serve_cfg.restart_limit
+            if limit is None:
+                self._learner = BackgroundLearner(self)
+            else:
+                self._learner = LearnerSupervisor(
+                    self, limit=limit,
+                    backoff_s=self.serve_cfg.restart_backoff_s)
         self._learner.start()
         return self._learner
 
@@ -574,7 +765,9 @@ class AMTLServer:
         crash between the two writes leaves an unpaired NEWER store
         record — which resume tolerates — never an engine state whose
         data is missing.  A label-free server writes no store subdir
-        at all (the PR-8 on-disk layout, byte for byte)."""
+        at all (the PR-8 on-disk layout, byte for byte).  The fault
+        plan's checkpoint hook sits exactly in that split window, so
+        the crash-split recovery path is testable on demand."""
         if self.serve_cfg.ckpt_dir is None:
             return None
         with self._state_lock:
@@ -583,6 +776,7 @@ class AMTLServer:
                     os.path.join(self.serve_cfg.ckpt_dir, "store"),
                     int(self._state.event),
                     keep_last=self.serve_cfg.keep_last)
+            self._faults.checkpoint_point()  # scripted crash-split
             path = checkpoint.save(self.serve_cfg.ckpt_dir,
                                    int(self._state.event), self._state,
                                    keep_last=self.serve_cfg.keep_last)
@@ -592,49 +786,81 @@ class AMTLServer:
     @classmethod
     def resume(cls, problem: MTLProblem, cfg: AMTLConfig, v0: Array,
                key: Array, serve_cfg: ServeConfig = ServeConfig(), *,
-               mesh=None, delay_offsets: Array | None = None) -> "AMTLServer":
-        """Restart-transparent construction: restore the newest rotated
-        checkpoint in `serve_cfg.ckpt_dir` if one exists, else a fresh
-        `engine.init(v0, key)` session.  The init state is built ONCE
-        (it doubles as `restore`'s `like` layout witness) and only the
-        state actually served materializes a serving snapshot.  The
-        restored server's snapshot — and therefore every subsequent
-        prediction — is bitwise the uninterrupted server's at the same
-        chunk boundary.
+               mesh=None, delay_offsets: Array | None = None,
+               fault_plan: Optional[FaultPlan] = None) -> "AMTLServer":
+        """Restart-transparent construction: restore the newest VALID
+        rotated checkpoint in `serve_cfg.ckpt_dir` if one exists, else
+        a fresh `engine.init(v0, key)` session.  The init state is
+        built ONCE (it doubles as `restore`'s `like` layout witness)
+        and only the state actually served materializes a serving
+        snapshot.  The restored server's snapshot — and therefore every
+        subsequent prediction — is bitwise the uninterrupted server's
+        at the same chunk boundary.
+
+        Record selection is integrity-checked
+        (`checkpoint.latest_valid_step`): a torn or bit-rotted newest
+        record is skipped and the session falls back one checkpoint
+        interval instead of dying on an opaque zip error.  A directory
+        whose records are ALL damaged raises `CheckpointCorruptError` —
+        silently restarting a session from scratch is worse than
+        failing loudly.
 
         If the checkpoint has a paired store record (labeled rows had
         been folded), the store is restored FIRST and the problem and
         engine are rebuilt from its snapshot — `problem` then only
         seeds the restored buffers' layout witness — so the resumed
         session continues against exactly the grown cohorts it was
-        checkpointed with.  Engine state shapes never depend on the row
+        checkpointed with.  A missing or corrupt paired record drops to
+        the remaining store records newest-first (the crash-split and
+        bit-rot cases).  Engine state shapes never depend on the row
         budget, so the fresh init state remains a valid `like` layout
         for `restore` either way."""
         server = cls.__new__(cls)
         server._configure(problem, cfg, v0, key, serve_cfg, mesh=mesh,
-                          delay_offsets=delay_offsets)
+                          delay_offsets=delay_offsets, fault_plan=fault_plan)
         init_state = server.engine.init(v0, key)
         d = serve_cfg.ckpt_dir
-        step = checkpoint.latest_step(d) if d is not None else None
+        step = None
+        if d is not None:
+            step = checkpoint.latest_valid_step(d, like=init_state)
+            if step is None and checkpoint.latest_step(d) is not None:
+                raise CheckpointCorruptError(
+                    d, [], "every engine record in the directory fails "
+                    "verification — refusing to silently restart the "
+                    "session from scratch")
         if step is None:
             server._install_state(init_state)
             return server
         store_dir = os.path.join(d, "store")
-        try:
-            store = TaskStore.restore(store_dir, step, problem.loss_name,
-                                      problem.reg_name, problem.lam)
-        except FileNotFoundError:
-            # No record at exactly `step`: either a label-free session
-            # (no store subdir — the common case) or a crash landed
-            # between the store write and the engine write, leaving one
-            # unpaired newer store record.  Take the newest record when
-            # one exists — it holds a superset of the paired rows (the
-            # engine state at `step` never saw the extras, and appends
-            # only ever affect FUTURE chunks).
-            newer = checkpoint.latest_step(store_dir)
-            store = None if newer is None else TaskStore.restore(
-                store_dir, newer, problem.loss_name, problem.reg_name,
-                problem.lam)
+
+        def _try_store(s: int) -> Optional[TaskStore]:
+            try:
+                return TaskStore.restore(store_dir, s, problem.loss_name,
+                                         problem.reg_name, problem.lam)
+            except (FileNotFoundError, CheckpointCorruptError):
+                return None
+
+        # Prefer the record paired with the engine step; fall back to
+        # the remaining records newest-first.  No record at exactly
+        # `step` is either a label-free session (no store subdir — the
+        # common case), a crash between the store write and the engine
+        # write (one unpaired NEWER record holding a superset of the
+        # paired rows — the engine state never saw the extras, appends
+        # only affect FUTURE chunks), or a torn/corrupt paired record
+        # (drop one interval of rows rather than the session).
+        store = _try_store(step)
+        if store is None:
+            for s in checkpoint.record_steps(store_dir):
+                if s == step:
+                    continue
+                store = _try_store(s)
+                if store is not None:
+                    break
+            if store is None and checkpoint.record_steps(store_dir):
+                raise CheckpointCorruptError(
+                    store_dir, [], "every store record fails to restore "
+                    "— resuming the engine without its folded rows would "
+                    "silently change the session")
         if store is not None:
             server._store = store
             server.problem = store.problem()
@@ -658,6 +884,20 @@ class AMTLServer:
         return None if store is None else store.num_rows
 
     def stats(self) -> dict[str, Any]:
+        sup = (self._learner
+               if isinstance(self._learner, LearnerSupervisor) else None)
+        health = {
+            "learner_restarts": 0 if sup is None else sup.restarts,
+            "learner_crashes": 0 if sup is None else sup.crashes,
+            "crash_log": [] if sup is None else list(sup.crash_log),
+            "recovery_ms": [] if sup is None else list(sup.recovery_ms),
+            "breaker_tripped": self.breaker_tripped,
+            "breaker_rejected": self._n_breaker_rejected,
+            "nonfinite_feedback": self._n_nonfinite_fb,
+            "nonfinite_chunks": self._n_nonfinite_chunks,
+            "quarantined_feedback": self._n_quarantined,
+            "quarantine_log": [dict(q) for q in self._quarantine_log],
+        }
         out = {
             "requests": self._n_requests,
             "predictions": self._n_predictions,
@@ -673,5 +913,6 @@ class AMTLServer:
             "learner_chunks": 0 if self._learner is None
                               else self._learner.chunks,
             "slo": None if self._slo is None else self._slo.snapshot(),
+            "health": health,
         }
         return out

